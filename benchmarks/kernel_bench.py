@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks: wall-time of the Pallas kernels (interpret mode
+on this CPU container — TPU timings come from the roofline terms, not from
+here) vs the pure-jnp oracles, plus the GNN layer pipeline."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.engines import GNNeratorController, GraphTensors
+from repro.core.models import build_graph_tensors, init_gnn, make_forward, paper_spec
+from repro.graphs.datasets import make_dataset
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6   # us
+
+
+def bench_kernels():
+    rng = np.random.default_rng(0)
+    rows = []
+    # dense engine
+    x = rng.standard_normal((512, 512)).astype(np.float32)
+    w = rng.standard_normal((512, 256)).astype(np.float32)
+    rows.append({"kernel": "dense_engine_512x512x256",
+                 "pallas_us": round(_time(lambda: ops.dense_matmul(x, w)), 1),
+                 "ref_us": round(_time(lambda: ref.dense_engine(x, w)), 1)})
+    # shard spmm
+    s, n, d = 4, 128, 256
+    a = (rng.random((s, s, n, n)) < 0.05).astype(np.float32)
+    h = rng.standard_normal((s, n, d)).astype(np.float32)
+    rows.append({"kernel": f"shard_spmm_S{s}_n{n}_D{d}",
+                 "pallas_us": round(_time(lambda: ops.graph_aggregate(a, h)), 1),
+                 "ref_us": round(_time(lambda: ref.shard_spmm(a, h)), 1)})
+    # fused layer
+    wgt = rng.standard_normal((d, 64)).astype(np.float32)
+    rows.append({"kernel": "fused_gnn_layer",
+                 "pallas_us": round(_time(
+                     lambda: ops.fused_aggregate_extract(a, h, wgt)), 1),
+                 "ref_us": round(_time(lambda: ref.fused_gnn(a, h, wgt)), 1)})
+    # e2e GCN forward on cora
+    ds = make_dataset("cora")
+    gt = build_graph_tensors(ds.edges, ds.profile.num_nodes, 512, "gcn")
+    spec = paper_spec("gcn", ds.profile.feature_dim, ds.profile.num_classes)
+    params = init_gnn(jax.random.key(0), spec)
+    fwd = make_forward(spec)
+    import jax.numpy as jnp
+    hg = gt.group(jnp.asarray(ds.features))
+    rows.append({"kernel": "gcn_cora_forward_e2e",
+                 "pallas_us": round(_time(lambda: fwd(params, gt, hg), reps=1), 1),
+                 "ref_us": float("nan")})
+    return rows, {"kernels_benchmarked": len(rows)}

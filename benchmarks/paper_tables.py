@@ -1,0 +1,133 @@
+"""Paper-table reproductions (one function per table/figure).
+
+Each function returns (rows, derived) where rows are CSV-printable dicts
+and derived is the headline number compared against the paper's claim.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dataflow import Dataflow, best_order, simulate_traffic, table1_costs
+from repro.core.perf_model import (GNNERATOR, GNNERATOR_NOBLOCK, GPU_2080TI,
+                                   HYGCN, model_time, speedup_table)
+from repro.graphs.datasets import DATASETS
+
+
+def bench_table1():
+    """Table I: analytical read/write costs vs simulated schedule traffic.
+
+    The simulator counts actual shard-feature loads for an S-pattern
+    schedule; the analytic formulas must match within one boundary term.
+    """
+    rows = []
+    max_rel = 0.0
+    for s in (2, 4, 8, 16):
+        for order in ("src_stationary", "dst_stationary"):
+            costs = table1_costs(s, I=1.0)[order]
+            df = Dataflow(S=s, D=64, B=64, order=order)
+            tr = simulate_traffic(df, nodes_per_shard=1, edges_per_shard=1.0,
+                                  dtype_bytes=1, skip_empty=False)
+            sim_reads = tr.offchip_read_bytes / 64      # per-dim units
+            sim_writes = tr.offchip_write_bytes / 64
+            rel = abs(sim_reads - costs["read"]) / max(costs["read"], 1)
+            max_rel = max(max_rel, rel)
+            rows.append({
+                "S": s, "order": order,
+                "analytic_read": costs["read"], "sim_read": sim_reads,
+                "analytic_write": costs["write"], "sim_write": sim_writes,
+                "best_order": best_order(s),
+            })
+    return rows, {"max_read_rel_err": round(max_rel, 3)}
+
+
+def bench_fig3():
+    """Fig 3: speedup vs RTX 2080 Ti across the 9 benchmarks.
+
+    Paper: 8.0x average with dimension-blocking, 4.2x without.
+    """
+    table = speedup_table(block_b=64)
+    rows = []
+    for key, r in table.items():
+        rows.append({"benchmark": key,
+                     "speedup_blocked": round(r["gnnerator"], 2),
+                     "speedup_noblock": round(r["gnnerator_noblock"], 2),
+                     "hygcn": round(r["hygcn"], 2)})
+    avg_b = float(np.mean([r["gnnerator"] for r in table.values()]))
+    avg_n = float(np.mean([r["gnnerator_noblock"] for r in table.values()]))
+    return rows, {
+        "avg_speedup_blocked": round(avg_b, 2), "paper_blocked": 8.0,
+        "avg_speedup_noblock": round(avg_n, 2), "paper_noblock": 4.2,
+        "blocking_gain": round(avg_b / avg_n, 2),
+        "paper_blocking_gain": round(8.0 / 4.2, 2),
+    }
+
+
+def bench_table5():
+    """Table V: GNNerator speedup over HyGCN for GCN.
+
+    Paper (blocked): cora 3.8x, citeseer 3.2x, pubmed 2.3x (avg 3.15x over
+    all networks). HyGCN's sparsity-elimination (orthogonal, see §VI-A) is
+    applied as the paper states: ~1.1x cora/pubmed, ~3x citeseer.
+    """
+    sparsity_elim = {"cora": 1.1, "citeseer": 3.0, "pubmed": 1.1}
+    paper = {"cora": 3.8, "citeseer": 3.2, "pubmed": 2.3}
+    paper_nb = {"cora": 1.8, "citeseer": 0.8, "pubmed": 1.0}
+    rows = []
+    for ds in DATASETS:
+        t_hygcn = model_time(HYGCN, "gcn", ds,
+                             sparsity_elim=sparsity_elim[ds])
+        t_blk = model_time(GNNERATOR, "gcn", ds, block_b=64)
+        t_nb = model_time(GNNERATOR_NOBLOCK, "gcn", ds)
+        rows.append({
+            "dataset": ds,
+            "vs_hygcn_blocked": round(t_hygcn / t_blk, 2),
+            "paper_blocked": paper[ds],
+            "vs_hygcn_noblock": round(t_hygcn / t_nb, 2),
+            "paper_noblock": paper_nb[ds],
+        })
+    avg = float(np.mean([r["vs_hygcn_blocked"] for r in rows]))
+    return rows, {"avg_vs_hygcn": round(avg, 2), "paper_avg": 3.15}
+
+
+def bench_fig4():
+    """Fig 4: feature-block-size sweep. Paper: smaller B is better until
+    B < dense-engine width (64), where utilization collapses."""
+    rows = []
+    for b in (16, 32, 64, 128, 256, 512):
+        speeds = []
+        for net in ("gcn", "graphsage", "graphsage_pool"):
+            for ds in DATASETS:
+                t_gpu = model_time(GPU_2080TI, net, ds)
+                speeds.append(t_gpu / model_time(GNNERATOR, net, ds, block_b=b))
+        rows.append({"B": b, "avg_speedup": round(float(np.mean(speeds)), 2)})
+    best = max(rows, key=lambda r: r["avg_speedup"])["B"]
+    return rows, {"best_B": best, "paper_best_B": 64}
+
+
+def bench_fig5():
+    """Fig 5: where to invest 2x hardware. Paper: bandwidth helps small
+    hidden sizes; a bigger Dense Engine wins at large hidden sizes."""
+    import dataclasses
+    variants = {
+        "2x_graph_mem": dataclasses.replace(GNNERATOR, onchip_graph_mb=48.0),
+        "2x_dense": dataclasses.replace(GNNERATOR, dense_tflops=32.0,
+                                        dense_width=128),
+        "2x_bw": dataclasses.replace(GNNERATOR, dram_gbs=512.0),
+    }
+    rows = []
+    winners = {}
+    for hidden in (16, 64, 128, 256, 512, 1024):
+        base = np.mean([model_time(GNNERATOR, "gcn", ds, hidden=hidden,
+                                   depth=3) for ds in DATASETS])
+        row = {"hidden": hidden}
+        for name, plat in variants.items():
+            t = np.mean([model_time(plat, "gcn", ds, hidden=hidden, depth=3)
+                         for ds in DATASETS])
+            row[name] = round(float(base / t), 3)
+        winners[hidden] = max(variants, key=lambda nm: row[nm])
+        rows.append(row)
+    return rows, {
+        "winner_small_hidden": winners[16],
+        "winner_large_hidden": winners[1024],
+        "paper": "bw wins small hidden; dense engine wins large hidden",
+    }

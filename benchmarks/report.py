@@ -1,0 +1,80 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline from results/dryrun JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report [--dry-dir results/dryrun]
+
+Prints the markdown to stdout; the checked-in EXPERIMENTS.md embeds the
+output (regenerate after hillclimb iterations).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from benchmarks.roofline import analyze_record, markdown_table
+
+
+def dryrun_table(dry_dir: str, mesh: str) -> str:
+    rows = []
+    for p in sorted(pathlib.Path(dry_dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("tag") or rec.get("mesh") != mesh:
+            continue
+        if rec["status"] == "skipped":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | skipped | — | — "
+                        f"| — | — | {rec['reason'][:46]} |")
+            continue
+        if rec["status"] == "error":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | ERROR | — | — "
+                        f"| — | — | {rec.get('error', '')[:46]} |")
+            continue
+        c, pr = rec["costs"], rec["proof"]
+        mem = pr.get("memory", {})
+        mem_gib = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+                   - mem.get("alias_bytes", 0)) / 2 ** 30
+        coll = c["collectives"]
+        dominant_coll = max(coll["wire_bytes"], key=coll["wire_bytes"].get) \
+            if coll["wire_bytes"] else "none"
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | ok | "
+            f"{c['flops_per_device']:.2e} | "
+            f"{c['bytes_accessed_per_device']:.2e} | "
+            f"{coll['total_wire_bytes'] / 2**30:.1f} | {mem_gib:.1f} | "
+            f"{dominant_coll} ({sum(coll['counts'].values()):.0f} ops) |")
+    hdr = ("| arch | shape | status | HLO FLOPs/dev | HLO bytes/dev | "
+           "collective GiB/dev | HBM GiB/dev | dominant collective |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def roofline_rows(dry_dir: str) -> list[dict]:
+    rows = []
+    for p in sorted(pathlib.Path(dry_dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("tag"):
+            continue
+        a = analyze_record(rec)
+        if a is None and rec.get("status") == "skipped":
+            a = {"arch": rec["arch"], "shape": rec["shape"],
+                 "mesh": rec["mesh"], "skipped": rec.get("reason", "")}
+        if a is not None:
+            rows.append(a)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-dir", default="results/dryrun")
+    args = ap.parse_args()
+    for mesh in ("single", "multi"):
+        print(f"\n### Dry-run — {mesh} pod mesh\n")
+        print(dryrun_table(args.dry_dir, mesh))
+    rows = roofline_rows(args.dry_dir)
+    print("\n### Roofline — single pod (16×16)\n")
+    print(markdown_table(rows, "single"))
+    print("\n### Roofline — multi pod (2×16×16)\n")
+    print(markdown_table(rows, "multi"))
+
+
+if __name__ == "__main__":
+    main()

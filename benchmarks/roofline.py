@@ -1,0 +1,117 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+For every (arch × shape × mesh) JSON produced by launch/dryrun.py, derive
+the three roofline terms on TPU v5e:
+
+    compute_s    = HLO_FLOPs_per_device   / 197e12   (bf16 peak per chip)
+    memory_s     = HLO_bytes_per_device   / 819e9    (HBM bandwidth)
+    collective_s = wire_bytes_per_device  / 50e9     (one ICI link; v5e has
+                   4 usable links — multi-link overlap is reported as
+                   headroom, not assumed)
+
+cost_analysis numbers are per-device (verified in DESIGN.md §5); wire
+bytes are the bandwidth-adjusted per-device collective traffic from
+dist/hlo_analysis.py. MODEL_FLOPS uses 6·N_active·T for training and
+2·N_active·T for inference (T = tokens processed per step).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+SUGGESTIONS = {
+    "compute": "increase per-device arithmetic intensity (larger micro-batch"
+               " or less remat recompute)",
+    "memory": "cut HLO bytes: fuse elementwise chains, bf16 intermediates,"
+              " avoid replicated activations",
+    "collective": "reshard to remove per-layer all-gathers (kv/heads layout),"
+                  " overlap collectives with compute, int8-compress DP grads",
+}
+
+
+def model_flops(rec: dict) -> float:
+    tokens = rec["global_batch"] * (1 if rec["kind"] == "decode"
+                                    else rec["seq_len"])
+    mult = 6.0 if rec["kind"] == "train" else 2.0
+    return mult * rec["params_active"] * tokens / max(rec.get("devices", 1), 1)
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    c = rec["costs"]
+    compute_s = c["flops_per_device"] / PEAK_FLOPS
+    memory_s = c["bytes_accessed_per_device"] / HBM_BW
+    coll_s = c["collectives"]["total_wire_bytes"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    mem = rec.get("proof", {}).get("memory", {}) or {}
+    hbm_gib = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+               - mem.get("alias_bytes", 0)) / 2 ** 30
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dominant,
+        "roofline_frac": compute_s / max(max(terms.values()), 1e-30),
+        "model_flops_per_dev": mf,
+        "useful_flop_frac": mf / max(c["flops_per_device"], 1e-30),
+        "mem_gib_per_dev": hbm_gib,
+        "suggestion": SUGGESTIONS[dominant],
+    }
+
+
+def load_all(dry_dir: str = "results/dryrun") -> list[dict]:
+    out = []
+    for p in sorted(pathlib.Path(dry_dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("tag"):
+            continue
+        a = analyze_record(rec)
+        if a is None and rec.get("status") == "skipped":
+            a = {"arch": rec["arch"], "shape": rec["shape"],
+                 "mesh": rec["mesh"], "skipped": rec.get("reason", "")}
+        if a is not None:
+            out.append(a)
+    return out
+
+
+def markdown_table(rows: list[dict], mesh: str = "single") -> str:
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | roofline frac | useful-FLOP frac | HBM GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {r['roofline_frac']:.2f} | "
+            f"{r['useful_flop_frac']:.2f} | {r['mem_gib_per_dev']:.1f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def bench_roofline(dry_dir: str = "results/dryrun"):
+    rows = load_all(dry_dir)
+    ok = [r for r in rows if "skipped" not in r]
+    if not ok:
+        return [], {"cells_analyzed": 0}
+    import numpy as np
+    fr = [r["roofline_frac"] for r in ok]
+    dom = {}
+    for r in ok:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    return rows, {
+        "cells_analyzed": len(ok),
+        "median_roofline_frac": round(float(np.median(fr)), 3),
+        "dominant_counts": dom,
+    }

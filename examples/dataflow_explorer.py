@@ -1,0 +1,61 @@
+"""Dataflow explorer: the paper's Algorithm-1 schedule, Table-I costs and
+the platform model, interactively.
+
+    PYTHONPATH=src python examples/dataflow_explorer.py --dataset pubmed \
+        --block 64 --budget-mb 24
+"""
+import argparse
+import sys
+
+from repro.core.dataflow import (Dataflow, best_order, blocked_vs_conventional,
+                                 simulate_traffic, table1_costs)
+from repro.core.perf_model import (GNNERATOR, GNNERATOR_NOBLOCK, GPU_2080TI,
+                                   HYGCN, model_time)
+from repro.core.sharding import max_shard_nodes_for_budget, shard_graph
+from repro.graphs.datasets import make_dataset
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="pubmed")
+    ap.add_argument("--block", type=int, default=64)
+    ap.add_argument("--budget-mb", type=float, default=24.0)
+    args = ap.parse_args()
+
+    ds = make_dataset(args.dataset)
+    d = ds.profile.feature_dim
+    budget = int(args.budget_mb * 2 ** 20)
+
+    print(f"=== {ds.profile.name}: N={ds.profile.num_nodes} "
+          f"E={ds.edges.shape[0]} D={d} ===\n")
+
+    cmp = blocked_vs_conventional(num_nodes=ds.profile.num_nodes, D=d,
+                                  B=args.block, onchip_bytes=budget)
+    print(f"conventional dataflow: n={cmp['n_conventional']} nodes/shard "
+          f"-> S={cmp['S_conventional']}")
+    print(f"dimension-blocked (B={args.block}): n={cmp['n_blocked']} "
+          f"-> S={cmp['S_blocked']}")
+    print(f"off-chip traffic ratio (conv/blocked): "
+          f"{cmp['traffic_ratio']:.2f}x\n")
+
+    n = max_shard_nodes_for_budget(budget, args.block)
+    sg = shard_graph(ds.edges, ds.profile.num_nodes, n)
+    print(f"actual sharding: {sg.S}x{sg.S} grid, occupied-block density "
+          f"{sg.density:.4f}")
+    print(f"best traversal order (Table I): {best_order(sg.S)}")
+    for order in ("dst_stationary", "src_stationary"):
+        tr = simulate_traffic(Dataflow(S=sg.S, D=d, B=args.block, order=order),
+                              nodes_per_shard=n, edges_per_shard=sg.occupancy)
+        print(f"  {order:16s}: {tr.offchip_bytes / 2**20:8.1f} MiB off-chip, "
+              f"{tr.onchip_edge_reads / 1e6:6.2f}M edge walks")
+    print(f"  Table-I (S={sg.S}): {table1_costs(sg.S)}\n")
+
+    print("platform model (GCN, end-to-end):")
+    for p in (GPU_2080TI, HYGCN, GNNERATOR_NOBLOCK, GNNERATOR):
+        t = model_time(p, "gcn", args.dataset, block_b=args.block)
+        print(f"  {p.name:18s}: {t * 1e3:8.3f} ms")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""Quickstart: train the paper's GCN on (synthetic) Cora with the
+GNNerator engines — dimension-blocked shard aggregation on the Graph
+Engine, fused feature extraction on the Dense Engine.
+
+    PYTHONPATH=src python examples/quickstart.py [--epochs 30]
+"""
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.models import (build_graph_tensors, init_gnn, make_forward,
+                               paper_spec)
+from repro.graphs.datasets import make_dataset
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="cora",
+                    choices=["cora", "citeseer", "pubmed"])
+    ap.add_argument("--network", default="gcn",
+                    choices=["gcn", "graphsage", "graphsage_pool"])
+    ap.add_argument("--epochs", type=int, default=30)
+    ap.add_argument("--shard-n", type=int, default=512,
+                    help="nodes per shard (the paper's n)")
+    args = ap.parse_args()
+
+    ds = make_dataset(args.dataset)
+    print(f"{ds.profile.name}: {ds.profile.num_nodes} nodes, "
+          f"{ds.edges.shape[0]} edges, {ds.profile.feature_dim} features "
+          f"({ds.size_mb:.1f} MB)")
+    gt = build_graph_tensors(ds.edges, ds.profile.num_nodes, args.shard_n,
+                             args.network)
+    print(f"shard grid: {gt.S}x{gt.S} (n={gt.n})")
+
+    spec = paper_spec(args.network, ds.profile.feature_dim,
+                      ds.profile.num_classes)
+    params = init_gnn(jax.random.key(0), spec)
+    fwd = make_forward(spec)
+    feats = gt.group(jnp.asarray(ds.features))
+    labels = jnp.asarray(ds.labels)
+    mask = jnp.asarray(ds.train_mask)
+
+    def loss_fn(p):
+        logits = fwd(p, gt, feats)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        return jnp.sum(nll * mask) / jnp.sum(mask), logits
+
+    opt_cfg = AdamWConfig(lr=5e-3, weight_decay=0.0, schedule="constant",
+                          warmup_steps=0, grad_clip=0)
+    opt = adamw_init(params)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+    for epoch in range(args.epochs):
+        t0 = time.time()
+        (loss, logits), grads = grad_fn(params)
+        params, opt, _ = adamw_update(grads, opt, params, opt_cfg)
+        acc = float(jnp.mean((jnp.argmax(logits, -1) == labels)[~ds.train_mask]))
+        print(f"epoch {epoch:3d} loss {float(loss):.4f} "
+              f"test-acc {acc:.3f} ({time.time() - t0:.2f}s)")
+    print("done.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

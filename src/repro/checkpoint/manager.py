@@ -1,0 +1,116 @@
+"""Fault-tolerant checkpointing.
+
+Atomic rolling checkpoints: each save writes to a temp directory and
+os.rename()s it into place (POSIX-atomic), so a preemption mid-save can
+never corrupt the latest checkpoint; a retention policy bounds disk use.
+Restore picks the newest complete step.
+
+Layout: <dir>/step_<N>/arrays.npz + meta.json. Arrays are stored flat,
+keyed by their pytree path. On a multi-host cluster each host saves its
+addressable shards under host_<i>/ and restore re-shards via
+jax.make_array_from_single_device_arrays; the single-process path here
+stores full arrays (the dry-run container has one process) — the layout
+and atomicity story are identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): np.asarray(leaf)
+            for path, leaf in leaves}
+
+
+def _unflatten(template, arrays: dict):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = jax.tree_util.keystr(path)
+        arr = arrays[key]
+        want = getattr(leaf, "dtype", None)
+        a = arr.astype(want) if want is not None and arr.dtype != want else arr
+        leaves.append(a)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    async_save: bool = False          # overlap save with the next train step
+
+    def __post_init__(self):
+        self.dir = pathlib.Path(self.directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, tree, step: int) -> None:
+        if self.async_save:
+            self.wait()
+            host = jax.tree.map(np.asarray, tree)  # snapshot before mutation
+            self._thread = threading.Thread(
+                target=self._save_sync, args=(host, step), daemon=True)
+            self._thread.start()
+        else:
+            self._save_sync(tree, step)
+
+    def _save_sync(self, tree, step: int) -> None:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f".tmp_step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        arrays = _flatten(tree)
+        np.savez(tmp / "arrays.npz", **arrays)
+        (tmp / "meta.json").write_text(json.dumps(
+            {"step": step, "num_arrays": len(arrays)}))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic publish
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self._steps())
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def _steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "meta.json").exists():   # complete checkpoints only
+                out.append(int(p.name.split("_")[1]))
+        return out
+
+    def latest_step(self) -> int | None:
+        steps = self._steps()
+        return max(steps) if steps else None
+
+    def restore(self, template, step: int):
+        d = self.dir / f"step_{step:08d}"
+        with np.load(d / "arrays.npz") as npz:
+            arrays = dict(npz)
+        return _unflatten(template, arrays)
+
+    def restore_latest(self, template):
+        self.wait()
+        step = self.latest_step()
+        if step is None:
+            return None
+        return self.restore(template, step), step

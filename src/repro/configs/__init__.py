@@ -1,0 +1,2 @@
+from repro.configs.registry import (ARCHS, SHAPES, get_config, get_smoke,
+                                    shape_applicable)  # noqa: F401

@@ -1,0 +1,33 @@
+"""qwen3-8b [dense] — 36L d=4096 32H (GQA kv=8) d_ff=12288,
+vocab=151936, per-head qk RMSNorm, no bias. [hf:Qwen/Qwen3-8B; hf]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-8b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    qk_norm=True,
+    param_dtype="float32",
+    compute_dtype="float32",
+)

@@ -1,0 +1,226 @@
+"""GNN dataflows (paper §IV, Algorithm 1 + Table I).
+
+The conventional dataflow walks the S×S shard grid with the *entire*
+feature vector (B = D) resident per node. The paper's feature
+dimension-blocking dataflow adds an outer loop over D/B feature blocks so
+only an (n × B) slice of features is on-chip at a time, allowing larger
+shards (bigger n, smaller S) for a fixed on-chip budget.
+
+This module provides:
+  * schedule generation (loop-nest iteration order, src-/dst-stationary,
+    serpentine S-pattern),
+  * the analytical Table-I read/write cost model,
+  * a traffic simulator that walks a schedule and counts actual off-chip
+    feature transfers + on-chip edge re-reads (used to validate Table I and
+    to drive the platform performance model in core/perf_model.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Literal
+
+import numpy as np
+
+from repro.utils import cdiv
+
+Order = Literal["src_stationary", "dst_stationary"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Dataflow:
+    """A dimension-blocked shard-grid schedule (Algorithm 1)."""
+
+    S: int                  # shard grid width/height
+    D: int                  # feature dimension
+    B: int                  # feature block size (B == D -> conventional)
+    order: Order = "dst_stationary"
+    serpentine: bool = True  # S-pattern: reverse inner loop on odd outer steps
+
+    @property
+    def num_blocks(self) -> int:
+        return cdiv(self.D, self.B)
+
+    def steps(self) -> Iterator[tuple[int, int, int]]:
+        """Yield (dim_block, dst_shard, src_shard) in execution order.
+
+        dst_stationary: for each block, for each dst, sweep src (dst
+        features stay resident until fully aggregated).
+        src_stationary: for each block, for each src, sweep dst.
+        """
+        for blk in range(self.num_blocks):
+            for outer in range(self.S):
+                inner_range = range(self.S)
+                if self.serpentine and outer % 2 == 1:
+                    inner_range = reversed(inner_range)  # type: ignore[assignment]
+                for inner in inner_range:
+                    if self.order == "dst_stationary":
+                        yield blk, outer, inner
+                    else:
+                        yield blk, inner, outer
+
+
+# --------------------------------------------------------------------------
+# Table I: analytical read/write costs (in units of shard-feature transfers,
+# i.e. one unit = one shard's worth of node features for the resident block).
+# --------------------------------------------------------------------------
+
+def table1_costs(S: int, I: float = 1.0) -> dict[str, dict[str, float]]:
+    """Paper Table I, verbatim.
+
+    I is the maximum number of input features required on-chip at one time
+    (the paper's I); with an S-pattern traversal, a stationary set is
+    carried across the grid and the moving set is (re)loaded per shard.
+    """
+    return {
+        "src_stationary": {
+            "read": S * I + (S - 1) * S - S + 1,
+            "write": S * S - S + 1,
+        },
+        "dst_stationary": {
+            "read": (S * S - S + 1) * I,
+            "write": float(S),
+        },
+    }
+
+
+def best_order(S: int, I: float = 1.0, read_cost: float = 1.0, write_cost: float = 1.0) -> Order:
+    """Pick the cheaper traversal order per Table I (equal rd/wr cost by default)."""
+    c = table1_costs(S, I)
+    tot = {k: v["read"] * read_cost + v["write"] * write_cost for k, v in c.items()}
+    return min(tot, key=tot.get)  # type: ignore[return-value]
+
+
+# --------------------------------------------------------------------------
+# Traffic simulation: walk the schedule, count actual transfers.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Traffic:
+    """Off-chip feature bytes + on-chip edge walks for one layer's aggregation."""
+
+    offchip_read_bytes: float
+    offchip_write_bytes: float
+    onchip_edge_reads: float     # edge-record reads (edge list walked D/B times)
+    steps: int
+
+    @property
+    def offchip_bytes(self) -> float:
+        return self.offchip_read_bytes + self.offchip_write_bytes
+
+
+def simulate_traffic(
+    df: Dataflow,
+    *,
+    nodes_per_shard: int,
+    edges_per_shard: np.ndarray | float,
+    dtype_bytes: int = 4,
+    edge_bytes: int = 8,
+    skip_empty: bool = True,
+) -> Traffic:
+    """Count off-chip transfers for a schedule.
+
+    Accounting (matches Table I exactly — validated in benchmarks):
+      * SOURCE features are inputs: read from DRAM whenever a source block
+        becomes resident (stationary: once per residency; moving: on every
+        entry, with the serpentine S-pattern saving one reload per turn).
+      * DESTINATION accumulators start at zero ON-CHIP (no first-touch
+        read); they are written back on every eviction and RE-read when a
+        previously evicted destination becomes resident again (partial-sum
+        reload in the src-stationary order).
+      * every visited shard's edge list is walked once per dimension block.
+    """
+    S, B = df.S, df.B
+    blk_feat_bytes = nodes_per_shard * B * dtype_bytes
+
+    if np.isscalar(edges_per_shard):
+        occ = np.full((S, S), float(edges_per_shard))
+    else:
+        occ = np.asarray(edges_per_shard, dtype=np.float64)
+
+    reads = 0.0
+    writes = 0.0
+    edge_reads = 0.0
+    steps = 0
+
+    dst_stationary = df.order == "dst_stationary"
+    resident_outer = -1
+    resident_inner = -1
+    touched_dst: set[tuple[int, int]] = set()
+    for blk, dst, src in df.steps():
+        outer, inner = (dst, src) if dst_stationary else (src, dst)
+        if skip_empty and occ[dst, src] == 0:
+            continue
+        steps += 1
+        if outer != resident_outer:
+            if dst_stationary:
+                # retire old dst accumulator; new one initializes on-chip
+                if resident_outer >= 0:
+                    writes += blk_feat_bytes
+            else:
+                # src stationary: read the new stationary source set
+                reads += blk_feat_bytes
+            resident_outer = outer
+            # NOTE: the moving set is NOT evicted on an outer change — the
+            # serpentine S-pattern begins the next sweep at the same inner
+            # index, which is exactly the reload Table I's "-S+1" saves.
+        if inner != resident_inner:
+            if dst_stationary:
+                reads += blk_feat_bytes          # moving source set: input
+            else:
+                # moving destination: write back the one we evict, reload
+                # partials if this dst was visited before (else init 0)
+                if resident_inner >= 0:
+                    writes += blk_feat_bytes
+                if (blk, inner) in touched_dst:
+                    reads += blk_feat_bytes
+                touched_dst.add((blk, inner))
+            resident_inner = inner
+        edge_reads += occ[dst, src]
+    # retire the final destination set
+    if resident_outer >= 0 or resident_inner >= 0:
+        writes += blk_feat_bytes
+    return Traffic(
+        offchip_read_bytes=reads,
+        offchip_write_bytes=writes,
+        onchip_edge_reads=edge_reads,
+        steps=steps,
+    )
+
+
+def blocked_vs_conventional(
+    *,
+    num_nodes: int,
+    D: int,
+    B: int,
+    onchip_bytes: int,
+    dtype_bytes: int = 4,
+) -> dict[str, float]:
+    """Headline comparison (paper §IV-B): for a fixed on-chip budget, the
+    blocked dataflow fits n_blocked = budget/(B) nodes vs n_conv =
+    budget/(D) nodes, so S shrinks by ~D/B and off-chip traffic drops.
+
+    Returns the shard counts and Table-I read totals for both dataflows.
+    """
+    from repro.core.sharding import max_shard_nodes_for_budget
+
+    n_conv = max_shard_nodes_for_budget(onchip_bytes, D, dtype_bytes)
+    n_blk = max_shard_nodes_for_budget(onchip_bytes, B, dtype_bytes)
+    S_conv = cdiv(num_nodes, n_conv)
+    S_blk = cdiv(num_nodes, n_blk)
+    costs_conv = table1_costs(S_conv)["dst_stationary"]
+    costs_blk = table1_costs(S_blk)["dst_stationary"]
+    # per-block cost × number of blocks, in node-feature-block units that we
+    # convert to bytes for a fair comparison
+    conv_bytes = (costs_conv["read"] + costs_conv["write"]) * n_conv * D * dtype_bytes
+    blk_bytes = (
+        (costs_blk["read"] + costs_blk["write"]) * n_blk * B * dtype_bytes * (D // max(B, 1))
+    )
+    return {
+        "n_conventional": n_conv,
+        "n_blocked": n_blk,
+        "S_conventional": S_conv,
+        "S_blocked": S_blk,
+        "offchip_bytes_conventional": conv_bytes,
+        "offchip_bytes_blocked": blk_bytes,
+        "traffic_ratio": conv_bytes / max(blk_bytes, 1.0),
+    }

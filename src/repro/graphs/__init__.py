@@ -1,0 +1,1 @@
+from repro.graphs.datasets import DATASETS, GraphData, make_dataset  # noqa: F401

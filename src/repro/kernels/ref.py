@@ -1,0 +1,128 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth used by tests/test_kernels.py
+(assert_allclose vs the kernel in interpret mode across shape/dtype sweeps)
+and as the CPU fallback backend in kernels/ops.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _activate(x, activation: str):
+    if activation == "none":
+        return x
+    if activation == "relu":
+        return jax.nn.relu(x)
+    if activation == "gelu":
+        return jax.nn.gelu(x)
+    if activation == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(f"unknown activation {activation}")
+
+
+def dense_engine(x, w, b=None, *, activation: str = "none"):
+    """Dense Engine oracle: act(x @ w + b).
+
+    x: (M, K), w: (K, N), b: (N,) or None.
+    """
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return _activate(out, activation).astype(x.dtype)
+
+
+def shard_spmm(blocks, h):
+    """Graph Engine (linear aggregation) oracle.
+
+    blocks: (S, S, n, n) densified per-shard adjacency, A[i, j, v, u].
+    h:      (S, n, D) node features grouped by shard.
+    returns (S, n, D): out[i, v] = sum_{j,u} A[i,j,v,u] * h[j,u].
+    """
+    return jnp.einsum(
+        "ijvu,jud->ivd",
+        blocks.astype(jnp.float32),
+        h.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(h.dtype)
+
+
+def fused_gnn(blocks, h, w, *, activation: str = "none"):
+    """Fused aggregation + feature extraction oracle (inter-stage fusion).
+
+    out = act( (A · H) · W ):  blocks (S,S,n,n), h (S,n,D), w (D,F)
+    returns (S, n, F).
+    """
+    agg = jnp.einsum(
+        "ijvu,jud->ivd",
+        blocks.astype(jnp.float32),
+        h.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    out = jnp.einsum("ivd,df->ivf", agg, w.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return _activate(out, activation).astype(h.dtype)
+
+
+def seg_gather_agg(edge_src, edge_dst, edge_valid, h_src, n_dst: int, *, op: str = "max",
+                   keep_identity: bool = False):
+    """Edge-list aggregation oracle for one (dst, src) shard pair.
+
+    edge_src/edge_dst: (E,) int32 local node ids; edge_valid: (E,) bool.
+    h_src: (n_src, D). Returns (n_dst, D) with identity element where a
+    destination has no valid in-edges (0 for sum/mean, -inf->0 for max,
+    unless keep_identity — used when combining partial maxes across shards).
+    """
+    d = h_src.shape[-1]
+    gathered = h_src.astype(jnp.float32)[edge_src]            # (E, D)
+    if op == "max":
+        neg = jnp.float32(-jnp.inf)
+        gathered = jnp.where(edge_valid[:, None], gathered, neg)
+        out = jnp.full((n_dst, d), neg, dtype=jnp.float32)
+        out = out.at[edge_dst].max(gathered, mode="drop")
+        if not keep_identity:
+            out = jnp.where(jnp.isfinite(out), out, 0.0)
+        return out.astype(jnp.float32) if keep_identity else out.astype(h_src.dtype)
+    elif op in ("sum", "mean"):
+        gathered = jnp.where(edge_valid[:, None], gathered, 0.0)
+        out = jnp.zeros((n_dst, d), dtype=jnp.float32)
+        out = out.at[edge_dst].add(
+            jnp.where(edge_valid[:, None], gathered, 0.0), mode="drop")
+        if op == "mean":
+            cnt = jnp.zeros((n_dst,), jnp.float32).at[edge_dst].add(
+                edge_valid.astype(jnp.float32), mode="drop")
+            out = out / jnp.maximum(cnt, 1.0)[:, None]
+    else:
+        raise ValueError(f"unknown op {op}")
+    return out.astype(h_src.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    window: int | None = None):
+    """Attention oracle: softmax(q k^T * scale + mask) v.
+
+    q: (B, Hq, Sq, Dh), k/v: (B, Hkv, Skv, Dh) with Hq % Hkv == 0 (GQA).
+    window: local attention window (keys within [i-window+1, i]).
+    """
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, sq, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = scale if scale is not None else dh ** -0.5
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * s
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return out.reshape(b, hq, sq, dh).astype(q.dtype)

@@ -1,0 +1,91 @@
+"""Graph Engine gather/scatter kernel for non-linear aggregation.
+
+Max-pool aggregation (GraphsagePool) is not a matmul, so the densified
+shard_spmm path does not apply. This kernel keeps the ASIC's edge-by-edge
+view: the Edge Fetcher walks the shard's COO edge list, the Feature Fetcher
+gathers source rows, and the SIMD Reduce lane scatter-reduces into the
+destination scratchpad — all on an (n × B) dimension block resident in
+VMEM, with the same (blockD, dst, src) loop nest as shard_spmm.
+
+Edge ids are int32 and live in VMEM blocks (on real TPU one would prefetch
+them to SMEM with PrefetchScalarGridSpec; functionally identical).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -3.0e38  # python float: jnp constants would be captured as consts
+
+
+def _kernel(src_ref, dst_ref, valid_ref, h_ref, o_ref, acc_ref, *, ns: int, op: str):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, _NEG if op == "max" else 0.0)
+
+    src = src_ref[...]
+    dst = dst_ref[...]
+    valid = valid_ref[...] != 0
+    h = h_ref[...].astype(jnp.float32)          # (n_src, B) resident block
+    gathered = h[src]                            # (E, B) Feature Fetcher
+    acc = acc_ref[...]
+    if op == "max":
+        gathered = jnp.where(valid[:, None], gathered, _NEG)
+        acc = acc.at[dst].max(gathered, mode="drop")
+    else:  # sum
+        gathered = jnp.where(valid[:, None], gathered, 0.0)
+        acc = acc.at[dst].add(gathered, mode="drop")
+    acc_ref[...] = acc
+
+    @pl.when(j == ns - 1)
+    def _writeback():
+        out = acc_ref[...]
+        if op == "max":
+            out = jnp.where(out <= _NEG / 2, 0.0, out)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "block_b", "interpret"))
+def seg_gather_aggregate(
+    edge_src: jax.Array,
+    edge_dst: jax.Array,
+    edge_valid: jax.Array,
+    h: jax.Array,
+    *,
+    op: str = "max",
+    block_b: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Edge-list shard-grid aggregation, feature-blocked.
+
+    edge_src/edge_dst: (S, S, E) int32 local ids; edge_valid: (S, S, E)
+    int8/bool; h: (S, n, D). Returns (S, n, D) aggregated per destination.
+    """
+    s, s2, e = edge_src.shape
+    s3, n, d = h.shape
+    assert s == s2 == s3, (edge_src.shape, h.shape)
+    assert d % block_b == 0, (d, block_b)
+    assert op in ("max", "sum"), op
+    valid = edge_valid.astype(jnp.int8)
+    grid = (d // block_b, s, s)  # (blockD, dst, src)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, ns=s, op=op),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, e), lambda bd, i, j: (i, j, 0)),
+            pl.BlockSpec((None, None, e), lambda bd, i, j: (i, j, 0)),
+            pl.BlockSpec((None, None, e), lambda bd, i, j: (i, j, 0)),
+            pl.BlockSpec((None, n, block_b), lambda bd, i, j: (j, 0, bd)),
+        ],
+        out_specs=pl.BlockSpec((None, n, block_b), lambda bd, i, j: (i, 0, bd)),
+        out_shape=jax.ShapeDtypeStruct((s, n, d), h.dtype),
+        scratch_shapes=[pltpu.VMEM((n, block_b), jnp.float32)],
+        interpret=interpret,
+    )(edge_src, edge_dst, valid, h)

@@ -1,0 +1,310 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import: jax locks the device count on first
+# backend initialization. Only the dry-run forces 512 placeholder host
+# devices — tests/benches see the single real CPU device.
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")  # silence SPMD warnings
+
+import argparse            # noqa: E402
+import dataclasses         # noqa: E402
+import json                # noqa: E402
+import pathlib             # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+
+import jax                 # noqa: E402
+
+from repro.configs.registry import (ARCHS, SHAPES, get_config,  # noqa: E402
+                                    shape_applicable)
+from repro.dist.hlo_analysis import analyze_collectives  # noqa: E402
+from repro.dist.shardings import ShardingRules  # noqa: E402
+from repro.launch.inputs import input_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.training.optimizer import AdamWConfig, adamw_update, make_schedule  # noqa: E402
+from repro.training.train_loop import (abstract_train_state,  # noqa: E402
+                                       make_train_step, train_state_axes)
+
+# ---------------------------------------------------------------------------
+# Methodology (single-core container; see DESIGN.md §5):
+#  * PROOF compile: the full-depth model, with layers under lax.scan
+#    (stacked params) so XLA compiles the per-layer program once. This
+#    proves every (arch × shape × mesh) lowers + compiles on the production
+#    mesh and yields full-depth memory_analysis. cost_analysis of a scan
+#    body is counted ONCE, so costs do NOT come from this artifact.
+#  * COST lowering: the unrolled model at two reduced depths (L1=2p,
+#    L2=4p; p = block-pattern period); every per-layer quantity (FLOPs,
+#    bytes, collective traffic) is exactly linear in depth, so the full-
+#    depth value is the 2-point linear extrapolation. Validated against an
+#    exact full-depth unrolled compile (see EXPERIMENTS.md §Dry-run).
+#  * decode/long shapes compile fast: proof == costs == exact full model.
+# ---------------------------------------------------------------------------
+
+
+def _reduced(cfg, k: int):
+    pat = cfg.pattern[:k]
+    return dataclasses.replace(cfg, n_layers=k, block_pattern=pat)
+
+
+def _cost_depths(cfg) -> tuple[int, int] | None:
+    p = lm.pattern_period(cfg)
+    l1, l2 = 2 * p, 4 * p
+    if cfg.n_layers <= l2:
+        return None
+    return l1, l2
+
+
+def _build_step(cfg, shape, rules):
+    """(fn, arg_avals, in_shardings, donate) for the unrolled model."""
+    batch_avals, batch_axes = input_specs(cfg, shape)
+    batch_sh = rules.tree_shardings(batch_avals, batch_axes)
+    if shape.kind == "train":
+        params_abs, opt_abs = abstract_train_state(cfg)
+        p_axes, o_axes = train_state_axes(cfg)
+        fn = make_train_step(cfg, AdamWConfig(), rules, remat=os.environ.get("DRYRUN_REMAT", "1") == "1")
+        return (fn,
+                (params_abs, opt_abs, batch_avals),
+                (rules.tree_shardings(params_abs, p_axes),
+                 rules.tree_shardings(opt_abs, o_axes),
+                 batch_sh),
+                (0, 1))
+    params_abs = lm.abstract_params(cfg)
+    p_sh = rules.tree_shardings(params_abs, lm.param_axes(cfg))
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return lm.prefill(params, cfg, batch, shape.seq_len,
+                              constrain=rules.constrain)
+        return fn, (params_abs, batch_avals), (p_sh, batch_sh), ()
+    cache_abs = lm.cache_struct(cfg, shape.global_batch, shape.seq_len,
+                                abstract=True)
+    cache_sh = rules.tree_shardings(cache_abs, lm.cache_axes(cfg))
+
+    def fn(params, batch, caches):
+        return lm.decode_step(params, cfg, batch, caches,
+                              constrain=rules.constrain)
+
+    return fn, (params_abs, batch_avals, cache_abs), (p_sh, batch_sh, cache_sh), (2,)
+
+
+def _build_scanned(cfg, shape, rules):
+    """Full-depth proof artifact with scanned layers."""
+    batch_avals, batch_axes = input_specs(cfg, shape)
+    batch_sh = rules.tree_shardings(batch_avals, batch_axes)
+    params_abs, p_axes = lm.scanned_abstract_params(cfg)
+    p_sh = rules.tree_shardings(params_abs, p_axes)
+    if shape.kind == "train":
+        f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jax.numpy.float32)
+        opt_abs = {"m": jax.tree.map(f32, params_abs),
+                   "v": jax.tree.map(f32, params_abs),
+                   "step": jax.ShapeDtypeStruct((), jax.numpy.int32)}
+        opt_sh = {"m": p_sh, "v": p_sh,
+                  "step": rules.sharding((), ())}
+        opt_cfg = AdamWConfig()
+        sched = make_schedule(opt_cfg)
+
+        def fn(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: lm.loss_fn_scanned(p, cfg, batch,
+                                             constrain=rules.constrain,
+                                             remat=True))(params)
+            new_p, new_o, stats = adamw_update(grads, opt_state, params,
+                                               opt_cfg, sched)
+            return new_p, new_o, {"loss": loss, **stats}
+
+        return fn, (params_abs, opt_abs, batch_avals), (p_sh, opt_sh, batch_sh), (0, 1)
+
+    def fn(params, batch):  # prefill proof: full-sequence forward
+        return lm.forward_scanned(params, cfg, batch, constrain=rules.constrain)
+
+    return fn, (params_abs, batch_avals), (p_sh, batch_sh), ()
+
+
+def _compile_once(fn, avals, shardings, donate, mesh):
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=shardings,
+                          donate_argnums=donate).lower(*avals)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+    colls = analyze_collectives(hlo)
+    return {
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_accessed_per_device": float(ca.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        "collectives": {
+            "operand_bytes": colls.operand_bytes,
+            "wire_bytes": colls.wire_bytes,
+            "counts": colls.counts,
+            "total_wire_bytes": colls.total_wire_bytes,
+        },
+        "hlo_lines": hlo.count("\n"),
+    }
+
+
+def _extrapolate(p1: dict, p2: dict, l1: int, l2: int, L: int) -> dict:
+    def ext(v1, v2):
+        return v2 + (L - l2) * (v2 - v1) / (l2 - l1)
+
+    out = {
+        "flops_per_device": ext(p1["flops_per_device"], p2["flops_per_device"]),
+        "bytes_accessed_per_device": ext(p1["bytes_accessed_per_device"],
+                                         p2["bytes_accessed_per_device"]),
+    }
+    coll = {"operand_bytes": {}, "wire_bytes": {}, "counts": {}}
+    ops = set(p1["collectives"]["wire_bytes"]) | set(p2["collectives"]["wire_bytes"])
+    for kind in ("operand_bytes", "wire_bytes", "counts"):
+        for op in ops:
+            v1 = p1["collectives"][kind].get(op, 0)
+            v2 = p2["collectives"][kind].get(op, 0)
+            coll[kind][op] = max(0.0, ext(v1, v2))
+    coll["total_wire_bytes"] = sum(coll["wire_bytes"].values())
+    out["collectives"] = coll
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: pathlib.Path,
+             overrides: dict | None = None, *, verbose: bool = True,
+             tag: str = "", skip_proof: bool = False) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    ok, why = shape_applicable(arch, shape_name)
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "kind": shape.kind, "tag": tag,
+        "params_total": cfg.num_params(),
+        "params_active": cfg.active_params(),
+        "n_layers": cfg.n_layers,
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fname = out_dir / f"{arch}__{shape_name}__{mesh_kind}{tag}.json"
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        fname.write_text(json.dumps(rec, indent=2))
+        if verbose:
+            print(f"[skip] {arch} × {shape_name}: {why}", flush=True)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = ShardingRules(mesh)
+    if overrides:
+        rules = rules.override(**overrides)
+    rec["devices"] = int(mesh.devices.size)
+    try:
+        if shape.kind == "decode":
+            res = _compile_once(*_build_step(cfg, shape, rules), mesh)
+            rec["proof"] = {"mode": "exact", "n_layers": cfg.n_layers,
+                            "compile_s": res["compile_s"],
+                            "memory": res["memory"]}
+            rec["costs"] = {"mode": "exact", **{k: v for k, v in res.items()
+                                                if k != "memory"}}
+        else:
+            depths = _cost_depths(cfg)
+            if depths is None:
+                res = _compile_once(*_build_step(cfg, shape, rules), mesh)
+                rec["proof"] = {"mode": "exact", "n_layers": cfg.n_layers,
+                                "compile_s": res["compile_s"],
+                                "memory": res["memory"]}
+                rec["costs"] = {"mode": "exact",
+                                **{k: v for k, v in res.items() if k != "memory"}}
+            else:
+                l1, l2 = depths
+                r1 = _compile_once(*_build_step(_reduced(cfg, l1), shape, rules), mesh)
+                r2 = _compile_once(*_build_step(_reduced(cfg, l2), shape, rules), mesh)
+                rec["costs"] = {
+                    "mode": "extrapolated", "l1": l1, "l2": l2,
+                    **_extrapolate(r1, r2, l1, l2, cfg.n_layers),
+                    "points": {str(l1): r1, str(l2): r2},
+                }
+                if skip_proof:
+                    rec["proof"] = {"mode": "skipped"}
+                else:
+                    pres = _compile_once(*_build_scanned(cfg, shape, rules), mesh)
+                    rec["proof"] = {"mode": "scanned-full-depth",
+                                    "n_layers": cfg.n_layers,
+                                    "compile_s": pres["compile_s"],
+                                    "memory": pres["memory"]}
+        rec["status"] = "ok"
+        if verbose:
+            mem = rec["proof"].get("memory", {})
+            mem_gib = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+                       - mem.get("alias_bytes", 0)) / 2 ** 30
+            c = rec["costs"]
+            print(f"[ok]  {arch:24s} {shape_name:12s} {mesh_kind:6s} "
+                  f"flops/dev={c['flops_per_device']:.3e} "
+                  f"coll={c['collectives']['total_wire_bytes'] / 2**20:9.1f}MiB "
+                  f"mem/dev={mem_gib:6.2f}GiB "
+                  f"({rec['costs'].get('mode', '?')[:5]}/"
+                  f"{rec['proof'].get('mode', '?')[:7]})", flush=True)
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[ERR] {arch} × {shape_name} × {mesh_kind}: {rec['error']}",
+                  flush=True)
+    fname.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run driver")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="", help="suffix for result files")
+    ap.add_argument("--skip-proof", action="store_true",
+                    help="skip the full-depth scanned proof compile "
+                         "(hillclimb iterations only need costs)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="sharding rule override: logical=mesh1[+mesh2] or "
+                         "logical= (empty => unsharded)")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    overrides = {}
+    for ov in args.override:
+        k, _, v = ov.partition("=")
+        if not v:
+            overrides[k] = ()
+        else:
+            overrides[k] = tuple(
+                tuple(p.split("+")) if "+" in p else p for p in v.split(","))
+
+    out_dir = pathlib.Path(args.out)
+    t0 = time.time()
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind, out_dir,
+                               overrides or None, tag=args.tag,
+                               skip_proof=args.skip_proof)
+                s = rec["status"]
+                n_ok += s == "ok"
+                n_skip += s == "skipped"
+                n_err += s == "error"
+    print(f"\ndone in {time.time() - t0:.0f}s: {n_ok} ok, {n_skip} skipped, "
+          f"{n_err} errors", flush=True)
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

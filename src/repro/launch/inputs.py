@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run pattern:
+weak-type-correct, shardable, no device allocation).
+
+For [vlm]/[audio] archs the modality frontend is a stub per the
+assignment: qwen2-vl receives precomputed patch embeddings (B,S,D) plus
+(3,B,S) M-RoPE position ids; musicgen receives (B,S,4) EnCodec codebook
+token ids (the EnCodec encoder itself is out of scope).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ShapeSpec
+from repro.models.config import ModelConfig
+from repro.nn.layers import Axes
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Returns (avals, axes) pytrees for the given shape kind.
+
+    train:   {tokens|embeddings[, positions], labels}
+    prefill: {tokens|embeddings[, positions]}
+    decode:  {tokens|embeddings[, positions], pos}   (+ caches, built by
+             launch/dryrun.py via lm.cache_struct)
+    """
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    avals: dict = {}
+    axes: dict = {}
+    if cfg.input_mode == "embeddings":
+        avals["embeddings"] = _sds((b, s, cfg.d_model), cfg.cdtype)
+        axes["embeddings"] = Axes(("act_batch", "act_seq", "act_embed"))
+        if cfg.rope_kind == "mrope" and shape.kind != "decode":
+            avals["positions"] = _sds((3, b, s), jnp.int32)
+            axes["positions"] = Axes(("mrope3", "act_batch", "act_seq"))
+    else:
+        tshape = (b, s, cfg.n_codebooks) if cfg.n_codebooks > 1 else (b, s)
+        taxes = ("act_batch", "act_seq", "codebooks") if cfg.n_codebooks > 1 \
+            else ("act_batch", "act_seq")
+        avals["tokens"] = _sds(tshape, jnp.int32)
+        axes["tokens"] = Axes(taxes)
+    if shape.kind == "train":
+        lshape = (b, shape.seq_len, cfg.n_codebooks) if cfg.n_codebooks > 1 \
+            else (b, shape.seq_len)
+        laxes = ("act_batch", "act_seq", "codebooks") if cfg.n_codebooks > 1 \
+            else ("act_batch", "act_seq")
+        avals["labels"] = _sds(lshape, jnp.int32)
+        axes["labels"] = Axes(laxes)
+    if shape.kind == "decode":
+        avals["pos"] = _sds((), jnp.int32)
+        axes["pos"] = Axes(())
+    return avals, axes
+
+
+def concrete_inputs(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0):
+    """Small-scale REAL inputs with the same structure (for smoke tests)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    avals, axes = input_specs(cfg, shape)
+
+    def materialize(sds):
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            hi = cfg.vocab_size if sds.shape else 2 ** 30
+            return jnp.asarray(rng.integers(0, hi, sds.shape), sds.dtype)
+        return jnp.asarray(rng.standard_normal(sds.shape), sds.dtype)
+
+    return jax.tree.map(materialize, avals), axes

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — smoke tests and benches must keep seeing the
+single real CPU device; only launch/dryrun.py forces 512 host devices.
+
+Production target: TPU v5e pods. Single pod = 16×16 = 256 chips
+(data, model); multi-pod = 2×16×16 = 512 chips (pod, data, model) where
+the leading "pod" axis crosses DCN. Designed so the same logical sharding
+rules scale to N pods by growing the leading axis (elastic scaling: see
+dist/shardings.py — batch shards over ("pod","data") and re-lowers for any
+pod count without code changes).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(devices: int, *, model_parallel: int = 16):
+    """Elastic variant: build a (data, model) mesh for whatever device
+    count the scheduler hands us (node failures / scale-up)."""
+    assert devices % model_parallel == 0, (devices, model_parallel)
+    return jax.make_mesh(
+        (devices // model_parallel, model_parallel), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

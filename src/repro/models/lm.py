@@ -1,0 +1,401 @@
+"""Unified decoder LM covering the whole assigned fleet.
+
+One structure function (`param_struct`) describes every architecture —
+dense / MoE / VLM / audio / hybrid / SSM — via the config's per-layer block
+pattern. Instantiated with different leaf constructors it yields real
+params, ShapeDtypeStructs (dry-run) or logical-axis trees (sharding); see
+nn/layers.py.
+
+Entry points:
+    init_params / abstract_params / param_axes
+    forward(params, cfg, batch)               # (B,S) -> logits
+    loss_fn(params, cfg, batch)               # next-token CE
+    prefill(params, cfg, batch, max_len)      # -> (logits, caches)
+    decode_step(params, cfg, batch, caches)   # one token + caches
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn.attention import (attn_apply, attn_cache_struct, attn_decode,
+                                attn_prefill_cache, attn_struct)
+from repro.nn.layers import (abstract_leaf, axes_leaf, dense, init_leaf,
+                             mlp_apply, mlp_struct, rms_norm)
+from repro.nn.moe import moe_apply, moe_struct
+from repro.nn.rglru import (rglru_apply, rglru_cache_struct, rglru_decode,
+                            rglru_struct)
+from repro.nn.ssd import (ssd_apply, ssd_cache_struct, ssd_decode,
+                          ssd_prefill_cache, ssd_struct)
+
+Constrain = Callable[[jax.Array, tuple], jax.Array]
+
+
+def _noop_constrain(x, axes):
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Parameter structure
+# ---------------------------------------------------------------------------
+
+def _layer_struct(leaf, i: int, cfg: ModelConfig) -> dict:
+    kind = cfg.pattern[i]
+    pre = f"layers.{i}"
+    p: dict[str, Any] = {"ln1": leaf(f"{pre}.ln1", (cfg.d_model,), ("embed",),
+                                     init="zeros")}
+    if kind in ("attn", "local_attn"):
+        p["attn"] = attn_struct(leaf, f"{pre}.attn", cfg)
+    elif kind == "rglru":
+        p["mixer"] = rglru_struct(leaf, f"{pre}.rglru", cfg)
+    elif kind == "mamba2":
+        p["mixer"] = ssd_struct(leaf, f"{pre}.ssd", cfg)
+    else:
+        raise ValueError(kind)
+    if cfg._layer_has_mlp(i):
+        p["ln2"] = leaf(f"{pre}.ln2", (cfg.d_model,), ("embed",), init="zeros")
+        if cfg.is_moe_layer(i):
+            p["moe"] = moe_struct(leaf, f"{pre}.moe", cfg)
+        else:
+            p["mlp"] = mlp_struct(leaf, f"{pre}.mlp", cfg.d_model, cfg.d_ff,
+                                  cfg.mlp_kind)
+    return p
+
+
+def param_struct(cfg: ModelConfig, leaf) -> dict:
+    d, v, c = cfg.d_model, cfg.vocab_size, cfg.n_codebooks
+    p: dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        if c == 1:
+            p["embed"] = leaf("embed", (v, d), ("vocab", "embed"), init="embed")
+        else:
+            p["embed"] = leaf("embed", (c, v, d), ("codebooks", "vocab", "embed"),
+                              init="embed")
+    else:  # embeddings supplied by the (stubbed) modality frontend
+        p["embed_proj"] = leaf("embed_proj", (d, d), ("embed_in", "embed"))
+    p["layers"] = [_layer_struct(leaf, i, cfg) for i in range(cfg.n_layers)]
+    p["final_norm"] = leaf("final_norm", (d,), ("embed",), init="zeros")
+    if not cfg.tie_embeddings or cfg.input_mode != "tokens":
+        if c == 1:
+            p["lm_head"] = leaf("lm_head", (d, v), ("embed", "vocab"))
+        else:
+            p["lm_head"] = leaf("lm_head", (c, d, v), ("codebooks", "embed", "vocab"))
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    return param_struct(cfg, init_leaf(key, cfg.pdtype))
+
+
+# ---------------------------------------------------------------------------
+# Scanned (stacked-layer) variant — used for the full-depth dry-run PROOF
+# compiles: XLA compiles the scan body once, so a 64-layer model compiles in
+# seconds on this single-core container. Costs are NOT taken from this
+# artifact (cost_analysis counts a while body once); see launch/dryrun.py.
+# ---------------------------------------------------------------------------
+
+def pattern_period(cfg: ModelConfig) -> int:
+    pat = cfg.pattern
+    for p in (1, 2, 3, 4, 6):
+        if len(pat) >= p and all(pat[i] == pat[i % p] for i in range(len(pat))):
+            return p
+    return len(pat)
+
+
+def stacked_abstract_layers(cfg: ModelConfig):
+    """Returns (stacked_params, stacked_axes, trail_params, trail_axes).
+
+    Layers are grouped by position within the repeating block pattern
+    (period p); each group of n_full layers is stacked with a leading
+    'layers' axis. L % p trailing layers stay unrolled.
+    """
+    from repro.nn.layers import Axes, abstract_leaf, axes_leaf
+    p = pattern_period(cfg)
+    L = cfg.n_layers
+    nf = L // p
+    a_leaf = abstract_leaf(cfg.pdtype)
+    x_leaf = axes_leaf()
+    abs_layers = [_layer_struct(a_leaf, i, cfg) for i in range(L)]
+    ax_layers = [_layer_struct(x_leaf, i, cfg) for i in range(L)]
+    stacked, stacked_ax = [], []
+    for j in range(p):
+        group = [abs_layers[j + k * p] for k in range(nf)]
+        stacked.append(jax.tree.map(
+            lambda *ls: jax.ShapeDtypeStruct((nf,) + ls[0].shape, ls[0].dtype),
+            *group))
+        stacked_ax.append(jax.tree.map(
+            lambda ax: Axes(("layers",) + ax.names), ax_layers[j]))
+    trail = abs_layers[nf * p:]
+    trail_ax = ax_layers[nf * p:]
+    return tuple(stacked), tuple(stacked_ax), trail, trail_ax
+
+
+def forward_scanned(params, cfg: ModelConfig, batch, *,
+                    constrain: Constrain = _noop_constrain,
+                    remat: bool = False) -> jax.Array:
+    """Forward with lax.scan over stacked layers. params:
+    {"embed"/..., "stack": tuple(stacked trees), "trail": [layer trees],
+     "final_norm", "lm_head"?}."""
+    p = pattern_period(cfg)
+    x = _embed_in(params, cfg, batch)
+    b, s = x.shape[0], x.shape[1]
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    positions = _positions(cfg, batch, b, s)
+
+    def body(x, xs):
+        for j in range(p):
+            x = _layer_apply(xs[j], x, cfg, j, positions, constrain)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["stack"])
+    nf = cfg.n_layers // p
+    for t, lp in enumerate(params["trail"]):
+        x = _layer_apply(lp, x, cfg, nf * p + t, positions, constrain)
+    return _logits_out(params, cfg, x)
+
+
+def scanned_abstract_params(cfg: ModelConfig):
+    """(abstract_params, axes) for the scanned variant."""
+    full = param_struct(cfg, abstract_leaf(cfg.pdtype))
+    full_ax = param_struct(cfg, axes_leaf())
+    stack, stack_ax, trail, trail_ax = stacked_abstract_layers(cfg)
+    params = {k: v for k, v in full.items() if k != "layers"}
+    axes = {k: v for k, v in full_ax.items() if k != "layers"}
+    params["stack"], params["trail"] = stack, list(trail)
+    axes["stack"], axes["trail"] = stack_ax, list(trail_ax)
+    return params, axes
+
+
+def loss_fn_scanned(params, cfg: ModelConfig, batch, *,
+                    constrain: Constrain = _noop_constrain,
+                    remat: bool = False) -> jax.Array:
+    logits = forward_scanned(params, cfg, batch, constrain=constrain,
+                             remat=remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].clip(0).astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    return param_struct(cfg, abstract_leaf(cfg.pdtype))
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    return param_struct(cfg, axes_leaf())
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _embed_in(params, cfg: ModelConfig, batch) -> jax.Array:
+    if cfg.input_mode == "embeddings":
+        x = batch["embeddings"].astype(cfg.cdtype)
+        return dense(x, params["embed_proj"])
+    toks = batch["tokens"]
+    if cfg.n_codebooks == 1:
+        x = params["embed"][toks]
+    else:  # MusicGen: sum codebook embeddings; toks (B,S,C)
+        x = sum(params["embed"][c][toks[..., c]] for c in range(cfg.n_codebooks))
+    return x.astype(cfg.cdtype) * cfg.emb_scale
+
+
+def _logits_out(params, cfg: ModelConfig, x) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        if cfg.n_codebooks == 1:
+            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+        else:
+            logits = jnp.einsum("bsd,cvd->bscv", x, params["embed"].astype(x.dtype))
+    else:
+        head = params["lm_head"].astype(x.dtype)
+        if cfg.n_codebooks == 1:
+            logits = jnp.einsum("bsd,dv->bsv", x, head)
+        else:
+            logits = jnp.einsum("bsd,cdv->bscv", x, head)
+    return logits * cfg.logit_scale
+
+
+def _positions(cfg: ModelConfig, batch, b: int, s: int):
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.rope_kind == "mrope":
+        return jnp.broadcast_to(pos, (3, b, s))
+    return pos
+
+
+def _layer_apply(lp, x, cfg: ModelConfig, i: int, positions, constrain):
+    kind = cfg.pattern[i]
+    rs = cfg.residual_scale
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        mix = attn_apply(lp["attn"], h, cfg, positions)
+    elif kind == "local_attn":
+        mix = attn_apply(lp["attn"], h, cfg, positions, window=cfg.local_window)
+    elif kind == "rglru":
+        mix = rglru_apply(lp["mixer"], h, cfg)
+    else:  # mamba2
+        mix = ssd_apply(lp["mixer"], h, cfg)
+    # constrain the block OUTPUT before the residual add: the TP psum can
+    # then lower as reduce-scatter straight into the seq-sharded layout
+    # instead of a full all-reduce followed by a slice
+    mix = constrain(mix, ("act_batch", "act_seq", "act_embed"))
+    x = x + rs * mix
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    if "ln2" in lp:
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            ffn = moe_apply(lp["moe"], h, cfg, constrain)
+        else:
+            ffn = mlp_apply(lp["mlp"], h, cfg.mlp_kind)
+        ffn = constrain(ffn, ("act_batch", "act_seq", "act_embed"))
+        x = x + rs * ffn
+        x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch, *, constrain: Constrain = _noop_constrain,
+            remat: bool = False) -> jax.Array:
+    """Full-sequence forward -> logits (B,S,V) [or (B,S,C,V)]."""
+    x = _embed_in(params, cfg, batch)
+    b, s = x.shape[0], x.shape[1]
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    positions = _positions(cfg, batch, b, s)
+
+    def one_layer(lp, x, i):
+        return _layer_apply(lp, x, cfg, i, positions, constrain)
+
+    if remat:
+        one_layer = jax.checkpoint(one_layer, static_argnums=(2,))
+    for i, lp in enumerate(params["layers"]):
+        x = one_layer(lp, x, i)
+    return _logits_out(params, cfg, x)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, constrain: Constrain = _noop_constrain,
+            remat: bool = False) -> jax.Array:
+    """Next-token cross entropy. labels: (B,S) or (B,S,C); -100 ignored."""
+    logits = forward(params, cfg, batch, constrain=constrain, remat=remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].clip(0).astype(jnp.int32), axis=-1
+    )[..., 0]
+    nll = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with per-layer caches
+# ---------------------------------------------------------------------------
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int, abstract: bool = False):
+    caches = []
+    for i, kind in enumerate(cfg.pattern):
+        if kind == "attn":
+            caches.append(attn_cache_struct(cfg, batch, max_len, None, abstract))
+        elif kind == "local_attn":
+            caches.append(attn_cache_struct(cfg, batch, max_len,
+                                            cfg.local_window, abstract))
+        elif kind == "rglru":
+            caches.append(rglru_cache_struct(cfg, batch, abstract))
+        else:
+            caches.append(ssd_cache_struct(cfg, batch, abstract))
+    return caches
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical axes tree matching cache_struct."""
+    from repro.nn.layers import Axes
+    axes = []
+    for kind in cfg.pattern:
+        if kind in ("attn", "local_attn"):
+            a = Axes(("act_batch", "kv_heads_n", "cache_seq", "head_dim"))
+            axes.append({"k": a, "v": a})
+        elif kind == "rglru":
+            axes.append({"h": Axes(("act_batch", "lru")),
+                         "conv": Axes(("act_batch", "conv_w", "lru"))})
+        else:
+            axes.append({"state": Axes(("act_batch", "ssm_heads", "ssm_p",
+                                        "ssm_state")),
+                         "conv": Axes(("act_batch", "conv_w", "ssm_conv"))})
+    return axes
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int,
+            *, constrain: Constrain = _noop_constrain):
+    """Run the prompt, return (last-position logits, caches)."""
+    x = _embed_in(params, cfg, batch)
+    b, s = x.shape[0], x.shape[1]
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    positions = _positions(cfg, batch, b, s)
+    caches = []
+    for i, lp in enumerate(params["layers"]):
+        kind = cfg.pattern[i]
+        rs = cfg.residual_scale
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if kind in ("attn", "local_attn"):
+            window = cfg.local_window if kind == "local_attn" else None
+            mix, (k, v) = attn_apply(lp["attn"], h, cfg, positions,
+                                     window=window, return_kv=True)
+            caches.append(attn_prefill_cache(k, v, max_len, window))
+        elif kind == "rglru":
+            mix, cache = rglru_apply(lp["mixer"], h, cfg, return_state=True)
+            caches.append(cache)
+        else:
+            mix, cache = ssd_prefill_cache(lp["mixer"], h, cfg)
+            caches.append(cache)
+        x = x + rs * mix
+        if "ln2" in lp:
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            ffn = moe_apply(lp["moe"], h, cfg, constrain) if "moe" in lp else \
+                mlp_apply(lp["mlp"], h, cfg.mlp_kind)
+            x = x + rs * ffn
+        x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    logits = _logits_out(params, cfg, x[:, -1:])
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, batch, caches, *,
+                constrain: Constrain = _noop_constrain):
+    """One decode step. batch: {"tokens": (B,1[,C]) | "embeddings": (B,1,D),
+    "pos": scalar int32}. Returns (logits, new_caches)."""
+    pos = batch["pos"]
+    x = _embed_in(params, cfg, batch)
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    new_caches = []
+    for i, lp in enumerate(params["layers"]):
+        kind = cfg.pattern[i]
+        rs = cfg.residual_scale
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if kind in ("attn", "local_attn"):
+            window = cfg.local_window if kind == "local_attn" else None
+            mix, cache = attn_decode(lp["attn"], h, cfg, caches[i], pos,
+                                     window=window)
+        elif kind == "rglru":
+            mix, cache = rglru_decode(lp["mixer"], h, cfg, caches[i])
+        else:
+            mix, cache = ssd_decode(lp["mixer"], h, cfg, caches[i])
+        new_caches.append(cache)
+        x = x + rs * mix
+        if "ln2" in lp:
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            ffn = moe_apply(lp["moe"], h, cfg, constrain) if "moe" in lp else \
+                mlp_apply(lp["mlp"], h, cfg.mlp_kind)
+            x = x + rs * ffn
+        x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    logits = _logits_out(params, cfg, x)
+    return logits, new_caches

@@ -1,0 +1,222 @@
+"""Attention for the LM fleet: GQA, RoPE/M-RoPE, qk-norm, QKV bias, local
+windows, chunked online-softmax prefill and ring-buffer decode caches.
+
+Design notes (dry-run fidelity — see DESIGN.md §5):
+  * The kv-chunk loop is a *statically unrolled* Python loop with running
+    max/denominator (online softmax). XLA's cost_analysis counts while-loop
+    bodies once, so lax.scan here would silently undercount attention FLOPs
+    by the trip count; unrolling keeps HLO costs exact AND bounds the live
+    logit tile to (S × S/nc) — the dimension-blocking discipline of the
+    paper applied to the kv axis.
+  * Local (sliding window) attention uses a banded path: q is chunked to
+    the window size and each q-chunk attends only its two overlapping
+    kv-chunks, so prefill FLOPs are O(S·W) not O(S²).
+  * Decode keeps a ring buffer of W entries for local layers (pos % W
+    indexing) and a full S_max buffer for global layers.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn.layers import Leaf, dense, rms_norm
+from repro.nn.rope import apply_mrope, apply_rope
+
+NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attn_struct(leaf: Leaf, prefix: str, cfg: ModelConfig) -> dict:
+    d, dh = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": leaf(f"{prefix}.wq", (d, hq * dh), ("embed", "heads")),
+        "wk": leaf(f"{prefix}.wk", (d, hkv * dh), ("embed", "kv_heads")),
+        "wv": leaf(f"{prefix}.wv", (d, hkv * dh), ("embed", "kv_heads")),
+        "wo": leaf(f"{prefix}.wo", (hq * dh, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = leaf(f"{prefix}.bq", (hq * dh,), ("heads",), init="zeros")
+        p["bk"] = leaf(f"{prefix}.bk", (hkv * dh,), ("kv_heads",), init="zeros")
+        p["bv"] = leaf(f"{prefix}.bv", (hkv * dh,), ("kv_heads",), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = leaf(f"{prefix}.q_norm", (dh,), ("head_dim",), init="zeros")
+        p["k_norm"] = leaf(f"{prefix}.k_norm", (dh,), ("head_dim",), init="zeros")
+    return p
+
+
+def _mask_logits(logits, qpos, kpos, window):
+    """logits (..., Sq, Sk); qpos (Sq,), kpos (Sk,) absolute positions."""
+    mask = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    return jnp.where(mask, logits, NEG)
+
+
+def _sdpa_chunked(q, k, v, qpos, kpos, *, window, n_chunks):
+    """Online-softmax over kv chunks. q (B,Hkv,G,Sq,dh); k/v (B,Hkv,Sk,dh)."""
+    b, hkv, g, sq, dh = q.shape
+    sk = k.shape[2]
+    scale = dh ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    csize = -(-sk // n_chunks)
+    m = jnp.full((b, hkv, g, sq), NEG, jnp.float32)
+    l = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
+    for c in range(n_chunks):
+        lo, hi = c * csize, min((c + 1) * csize, sk)
+        if lo >= hi:
+            break
+        kc = k[:, :, lo:hi].astype(jnp.float32)
+        vc = v[:, :, lo:hi].astype(jnp.float32)
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kc)
+        logits = _mask_logits(logits, qpos, kpos[lo:hi], window)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vc)
+        m = m_new
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def _sdpa_banded(q, k, v, qpos, kpos, *, window):
+    """Local attention: q-chunks of size W attend 2 kv-chunks -> O(S·W)."""
+    b, hkv, g, sq, dh = q.shape
+    sk = k.shape[2]
+    w = window
+    if sq <= 2 * w or sq != sk:
+        return _sdpa_chunked(q, k, v, qpos, kpos, window=window,
+                             n_chunks=max(1, min(8, sk // max(w, 1))))
+    scale = dh ** -0.5
+    nq = -(-sq // w)
+    pad = nq * w - sq
+    outs = []
+    for c in range(nq):
+        lo, hi = c * w, min((c + 1) * w, sq)
+        qc = q[:, :, :, lo:hi].astype(jnp.float32) * scale
+        klo = max(0, lo - w + 1)
+        # kv span covering [klo, hi)
+        kc = k[:, :, klo:hi].astype(jnp.float32)
+        vc = v[:, :, klo:hi].astype(jnp.float32)
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc)
+        logits = _mask_logits(logits, qpos[lo:hi], kpos[klo:hi], window)
+        p = jax.nn.softmax(logits, axis=-1)
+        outs.append(jnp.einsum("bhgqk,bhkd->bhgqd", p, vc))
+    out = jnp.concatenate(outs, axis=3)
+    del pad
+    return out
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    b, s, d = x.shape
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = dense(x, p["wq"], p.get("bq")).reshape(b, s, hq, dh).transpose(0, 2, 1, 3)
+    k = dense(x, p["wk"], p.get("bk")).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    v = dense(x, p["wv"], p.get("bv")).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _rope_qk(q, k, positions, cfg: ModelConfig):
+    if cfg.rope_kind == "mrope":
+        # positions: (3, B, S)
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def attn_apply(p: dict, x, cfg: ModelConfig, positions, *, window=None,
+               return_kv: bool = False):
+    """Full-sequence (train/prefill) attention. x (B,S,D) -> (B,S,D)."""
+    b, s, d = x.shape
+    hkv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _project_qkv(p, x, cfg)
+    q, k = _rope_qk(q, k, positions, cfg)
+    qg = q.reshape(b, hkv, g, s, cfg.head_dim)
+    pos1d = jnp.arange(s)
+    if window is not None:
+        out = _sdpa_banded(qg, k, v, pos1d, pos1d, window=window)
+    else:
+        # target ~1k-wide kv chunks: bounds the live logit tile to
+        # (Sq × 1024) while keeping the unrolled loop ≤ 32 bodies
+        n_chunks = max(1, min(32, s // 1024))
+        out = _sdpa_chunked(qg, k, v, pos1d, pos1d, window=None,
+                            n_chunks=n_chunks)
+    out = out.reshape(b, cfg.n_heads, s, cfg.head_dim)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    out = dense(out.astype(x.dtype), p["wo"])
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attn_cache_struct(cfg: ModelConfig, batch: int, max_len: int, window,
+                      abstract: bool = False):
+    w = min(max_len, window) if window is not None else max_len
+    shape = (batch, cfg.n_kv_heads, w, cfg.head_dim)
+    if abstract:
+        return {"k": jax.ShapeDtypeStruct(shape, cfg.cdtype),
+                "v": jax.ShapeDtypeStruct(shape, cfg.cdtype)}
+    return {"k": jnp.zeros(shape, cfg.cdtype), "v": jnp.zeros(shape, cfg.cdtype)}
+
+
+def attn_decode(p: dict, x, cfg: ModelConfig, cache: dict, pos, *, window=None):
+    """Single-token decode. x (B,1,D); pos scalar int32; cache k/v
+    (B,Hkv,W,dh) where W = window (ring buffer) or max_len."""
+    b = x.shape[0]
+    dh, hkv, g = cfg.head_dim, cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q, k_new, v_new = _project_qkv(p, x, cfg)
+    if cfg.rope_kind == "mrope":
+        pos3 = jnp.broadcast_to(pos, (3, b, 1)).astype(jnp.int32)
+        q, k_new = _rope_qk(q, k_new, pos3, cfg)
+    else:
+        pos1 = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+        q, k_new = _rope_qk(q, k_new, pos1, cfg)
+    w = cache["k"].shape[2]
+    slot = pos % w
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, 0, slot, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, 0, slot, 0))
+    # absolute position held by each slot s: pos - ((pos - s) mod w)
+    s_idx = jnp.arange(w)
+    kpos = pos - ((pos - s_idx) % w)
+    valid = kpos >= 0
+    if window is not None:
+        valid &= kpos > pos - window
+    qg = q.reshape(b, hkv, g, 1, dh).astype(jnp.float32) * dh ** -0.5
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG)
+    prob = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", prob, v.astype(jnp.float32))
+    out = out.reshape(b, cfg.n_heads, 1, dh).transpose(0, 2, 1, 3)
+    out = out.reshape(b, 1, cfg.n_heads * dh).astype(x.dtype)
+    return dense(out, p["wo"]), {"k": k, "v": v}
+
+
+def attn_prefill_cache(k, v, max_len: int, window):
+    """Build a decode cache from prefill-computed (post-rope) k/v."""
+    b, hkv, s, dh = k.shape
+    if window is not None and window < max_len:
+        w = window
+        # last w entries laid out by absolute position mod w
+        tail_pos = jnp.arange(s - w, s)
+        slots = tail_pos % w
+        buf_k = jnp.zeros((b, hkv, w, dh), k.dtype).at[:, :, slots].set(
+            k[:, :, s - w:])
+        buf_v = jnp.zeros((b, hkv, w, dh), v.dtype).at[:, :, slots].set(
+            v[:, :, s - w:])
+        return {"k": buf_k, "v": buf_v}
+    w = max_len
+    pad = w - s
+    padk = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    padv = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return {"k": padk, "v": padv}

@@ -1,0 +1,136 @@
+"""Functional parameter construction + basic layers.
+
+Models are described ONCE by a structure function that receives a *leaf
+constructor* ``leaf(name, shape, axes, init=..., scale=...)`` and returns a
+param pytree. Instantiating the same structure with different leaf
+constructors yields:
+
+  * real parameters        (init_leaf — deterministic per-name RNG fold-in)
+  * ShapeDtypeStructs      (abstract_leaf — for .lower() dry-runs, no alloc)
+  * logical-axis trees     (axes_leaf — consumed by dist/shardings.py)
+
+so parameters, dry-run stand-ins, and sharding specs can never diverge.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Leaf = Callable[..., object]
+
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    """Logical-axis names for one parameter. NOT registered as a pytree
+    node, so an axes tree has the same treedef as the param tree and the
+    two can be jax.tree.map'ed together."""
+
+    names: tuple
+
+    def __iter__(self):
+        return iter(self.names)
+
+
+def _fold(key, name: str):
+    return jax.random.fold_in(key, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+
+
+def init_leaf(key, dtype) -> Leaf:
+    def leaf(name, shape, axes, init="normal", scale=None):
+        k = _fold(key, name)
+        if init == "normal":
+            fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+            std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+            return (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+        if init == "embed":
+            std = scale if scale is not None else 0.02
+            return (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "ssm_A":   # A_log: log of Uniform[1, 16]
+            u = jax.random.uniform(k, shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(jnp.float32)
+        if init == "dt_bias":  # softplus^-1 of Uniform[dt_min, dt_max]
+            lo, hi = scale or (0.001, 0.1)
+            u = jax.random.uniform(k, shape, jnp.float32, math.log(lo), math.log(hi))
+            dt = jnp.exp(u)
+            return (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32)
+        if init == "lru_lambda":  # softplus^-1 s.t. a in [0.9, 0.999]
+            u = jax.random.uniform(k, shape, jnp.float32, 0.9, 0.999)
+            log_a = jnp.log(u)   # in (-0.105, -0.001)
+            # param c*softplus(L) = -log a  ->  L = softplus^-1(-log a / c)
+            x = -log_a / 8.0
+            return jnp.log(jnp.expm1(x)).astype(jnp.float32)
+        raise ValueError(init)
+
+    return leaf
+
+
+def abstract_leaf(dtype) -> Leaf:
+    f32_inits = {"ssm_A", "dt_bias", "lru_lambda"}
+
+    def leaf(name, shape, axes, init="normal", scale=None):
+        dt = jnp.float32 if init in f32_inits else dtype
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    return leaf
+
+
+def axes_leaf() -> Leaf:
+    def leaf(name, shape, axes, init="normal", scale=None):
+        assert len(axes) == len(shape), (name, shape, axes)
+        return Axes(tuple(axes))
+
+    return leaf
+
+
+# ---------------------------------------------------------------------------
+# Layers (pure functions over param dicts)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    """RMSNorm with f32 statistics but NO f32 materialization of x: the
+    mean-of-squares accumulates in f32 through the dot (MXU-native), and
+    only the per-position rsqrt broadcast is f32 — halves the norm's HLO
+    bytes vs upcasting the whole tensor (EXPERIMENTS.md §Perf, E8)."""
+    dtype = x.dtype
+    d = x.shape[-1]
+    ss = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    inv = jax.lax.rsqrt(ss / d + eps)[..., None].astype(dtype)
+    return (x * inv) * (1.0 + scale.astype(jnp.float32)).astype(dtype)
+
+
+def dense(x, w, b=None):
+    out = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        out = out + b.astype(out.dtype)
+    return out
+
+
+def mlp_struct(leaf: Leaf, prefix: str, d: int, d_ff: int, kind: str) -> dict:
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": leaf(f"{prefix}.w_gate", (d, d_ff), ("embed", "mlp")),
+            "w_up": leaf(f"{prefix}.w_up", (d, d_ff), ("embed", "mlp")),
+            "w_down": leaf(f"{prefix}.w_down", (d_ff, d), ("mlp", "embed")),
+        }
+    return {  # plain 2-matmul MLP
+        "w_up": leaf(f"{prefix}.w_up", (d, d_ff), ("embed", "mlp")),
+        "w_down": leaf(f"{prefix}.w_down", (d_ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p: dict, x, kind: str):
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        h = act(dense(x, p["w_gate"])) * dense(x, p["w_up"])
+        return dense(h, p["w_down"])
+    return dense(jax.nn.gelu(dense(x, p["w_up"])), p["w_down"])

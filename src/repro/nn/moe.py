@@ -1,0 +1,133 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+The GNNerator lesson applied to MoE (DESIGN.md §4): token routing is an
+irregular gather/scatter, exactly like the Graph Engine's edge walk. The
+TPU-native move is the same one the paper makes for shards — *densify into
+MXU-sized blocks*: tokens are argsorted by expert, packed into a static
+(E, C, D) capacity buffer with flop-free gathers, pushed through batched
+per-expert matmuls, and scatter-combined back. Dispatch therefore costs
+ZERO matmul FLOPs (no one-hot dispatch einsums), so compiled HLO FLOPs stay
+within capacity_factor of the analytic active-param FLOPs — the
+MODEL_FLOPS/HLO_FLOPs roofline ratio stays honest.
+
+Tokens beyond an expert's capacity C = ceil(T·k/E · cf) are dropped
+(standard capacity-based MoE); the combine step weights surviving expert
+outputs by the (softmaxed) router probabilities. Shared experts (Qwen-MoE)
+run densely for every token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn.layers import Leaf, dense, mlp_apply, mlp_struct
+
+
+def moe_struct(leaf: Leaf, prefix: str, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    p = {
+        "router": leaf(f"{prefix}.router", (d, m.num_experts),
+                       ("embed", "experts"), scale=0.02),
+        # stacked expert weights: leading experts axis
+        "w_gate": leaf(f"{prefix}.w_gate", (m.num_experts, d, m.d_ff_expert),
+                       ("experts", "embed", "mlp")),
+        "w_up": leaf(f"{prefix}.w_up", (m.num_experts, d, m.d_ff_expert),
+                     ("experts", "embed", "mlp")),
+        "w_down": leaf(f"{prefix}.w_down", (m.num_experts, m.d_ff_expert, d),
+                       ("experts", "mlp", "embed")),
+    }
+    for i in range(m.n_shared_experts):
+        p[f"shared_{i}"] = mlp_struct(leaf, f"{prefix}.shared_{i}", d,
+                                      m.d_ff_shared, "swiglu")
+    return p
+
+
+def _capacity(tokens: int, m) -> int:
+    c = int(tokens * m.top_k * m.capacity_factor / m.num_experts) + 1
+    c = max(8, -(-c // 8) * 8)  # pad to a multiple of 8
+    # a row of T tokens can route at most T·k entries to one expert — for
+    # tiny rows (decode: T=1) the floor of 8 would be pure overcompute
+    return min(c, tokens * m.top_k)
+
+
+def moe_apply(p: dict, x, cfg: ModelConfig, constrain=None):
+    """x: (B, S, D) -> (B, S, D).
+
+    Dispatch is BATCHED PER ROW: every sort/gather/scatter carries the
+    batch dim as an explicit batching dimension, so under GSPMD a
+    batch-sharded residual stream keeps the whole dispatch device-local
+    (per-row capacity = per-device capacity, like real EP systems). A
+    flattened (B·S) dispatch would force GSPMD to replicate + all-reduce
+    full (T, D) f32 buffers every layer — measured 7× FLOPs and ~140
+    GB/layer of all-reduce on llama4-scout (EXPERIMENTS.md §Perf).
+    """
+    constrain = constrain or (lambda t, axes: t)
+    m = cfg.moe
+    b, s, d = x.shape
+    sk = s * m.top_k
+
+    # NOTE (EXPERIMENTS.md §Perf, llama4 E5 — refuted): an explicit
+    # all-gather of x at dispatch entry ("act_seq_rep") was hypothesized to
+    # beat GSPMD's per-gather resharding, but measured 43% WORSE collective
+    # traffic (19.9s -> 28.5s); GSPMD's own placement wins. Left unforced.
+    logits = dense(x.astype(jnp.float32), p["router"].astype(jnp.float32))
+    top_vals, top_idx = jax.lax.top_k(logits, m.top_k)          # (B, S, k)
+    if m.router_softmax_topk:
+        weights = jax.nn.softmax(top_vals, axis=-1)
+    else:
+        weights = jax.nn.sigmoid(top_vals)
+
+    # ---- sort-based dispatch, batched over rows, GATHER-only forward ----
+    # (forward scatters would fall back to replicate+all-reduce under
+    # GSPMD; a gather-expressed dispatch/combine stays batch-local)
+    flat_e = top_idx.reshape(b, sk)                              # (B, S*k)
+    sort_idx = jnp.argsort(flat_e, axis=-1)                      # (B, S*k)
+    sorted_e = jnp.take_along_axis(flat_e, sort_idx, axis=-1)
+    token_of = sort_idx // m.top_k                               # (B, S*k)
+    # group boundaries per row
+    first_of_e = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(m.num_experts),
+                                    side="left"))(sorted_e)      # (B, E)
+    counts = jnp.diff(first_of_e, axis=-1,
+                      append=jnp.full((b, 1), sk))               # (B, E)
+    pos_in_group = jnp.arange(sk)[None, :] - jnp.take_along_axis(
+        first_of_e, sorted_e, axis=-1)
+    cap = _capacity(s, m)                                        # per-row
+    keep = pos_in_group < cap
+    slot = jnp.where(keep, sorted_e * cap + pos_in_group,
+                     m.num_experts * cap - 1)
+
+    # dispatch: buffer slot (e, c) takes the token at sorted position
+    # first_of_e[e] + c (if c < counts[e])
+    src_q = first_of_e[:, :, None] + jnp.arange(cap)[None, None, :]  # (B,E,cap)
+    fill = jnp.arange(cap)[None, None, :] < counts[:, :, None]
+    src_q = jnp.minimum(src_q, sk - 1).reshape(b, m.num_experts * cap)
+    tok = jnp.take_along_axis(token_of, src_q, axis=-1)          # (B, E*cap)
+    buf = jnp.take_along_axis(x, tok[..., None], axis=1)         # (B,E*cap,D)
+    buf = buf * fill.reshape(b, m.num_experts * cap, 1).astype(buf.dtype)
+    buf = buf.reshape(b, m.num_experts, cap, d)
+    buf = constrain(buf, ("act_batch", "experts", "moe_cap", "act_embed"))
+
+    # ---- batched expert FFN (the only matmuls) ----
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(x.dtype))
+    out_e = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))
+    out_e = constrain(out_e, ("act_batch", "experts", "moe_cap", "act_embed"))
+
+    # ---- combine (gather back via the inverse permutation) ----
+    out_flat = out_e.reshape(b, m.num_experts * cap, d)
+    inv_sort = jnp.argsort(sort_idx, axis=-1)                    # (B, S*k)
+    slot_tok = jnp.take_along_axis(slot, inv_sort, axis=-1)      # token order
+    keep_tok = jnp.take_along_axis(keep, inv_sort, axis=-1)
+    vals = jnp.take_along_axis(out_flat, slot_tok[..., None], axis=1)
+    vals = jnp.where(keep_tok[..., None], vals, 0.0)
+    y = (vals.reshape(b, s, m.top_k, d)
+         * weights[..., None].astype(vals.dtype)).sum(axis=2)
+
+    # ---- shared experts (dense for all tokens) ----
+    y = y.astype(x.dtype)
+    for i in range(m.n_shared_experts):
+        y = y + mlp_apply(p[f"shared_{i}"], x, "swiglu")
+    return y

@@ -1,0 +1,107 @@
+"""RecurrentGemma / Griffin recurrent block with the RG-LRU.
+
+Block:  x ->  [linear_x -> causal conv(4) -> RG-LRU]  ⊙  [linear_y -> GeLU]
+           -> linear_out
+
+RG-LRU (Real-Gated Linear Recurrent Unit):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    log a_t = -c · softplus(Λ) · r_t      (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The diagonal first-order recurrence is evaluated with
+``jax.lax.associative_scan`` over time — log-depth, statically unrolled by
+XLA, so HLO cost analysis counts it exactly (DESIGN.md §5). Decode is the
+closed-form single step on a (B, W) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn.layers import Leaf, dense
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def rglru_struct(leaf: Leaf, prefix: str, cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, _width(cfg)
+    cw = cfg.rglru.conv_width
+    return {
+        "w_x": leaf(f"{prefix}.w_x", (d, w), ("embed", "lru")),
+        "w_y": leaf(f"{prefix}.w_y", (d, w), ("embed", "lru")),
+        "conv_w": leaf(f"{prefix}.conv_w", (cw, w), ("conv_w", "lru"), scale=0.5),
+        "conv_b": leaf(f"{prefix}.conv_b", (w,), ("lru",), init="zeros"),
+        "w_a": leaf(f"{prefix}.w_a", (w, w), ("lru", "lru_gate")),
+        "b_a": leaf(f"{prefix}.b_a", (w,), ("lru_gate",), init="zeros"),
+        "w_i": leaf(f"{prefix}.w_i", (w, w), ("lru", "lru_gate")),
+        "b_i": leaf(f"{prefix}.b_i", (w,), ("lru_gate",), init="zeros"),
+        "lam": leaf(f"{prefix}.lam", (w,), ("lru",), init="lru_lambda"),
+        "w_out": leaf(f"{prefix}.w_out", (w, d), ("lru", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+def _gates(p, xr, cfg):
+    c = cfg.rglru.c_exponent
+    r = jax.nn.sigmoid(dense(xr, p["w_a"], p["b_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(xr, p["w_i"], p["b_i"]).astype(jnp.float32))
+    log_a = -c * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xr.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_apply(p: dict, x, cfg: ModelConfig, *, return_state: bool = False):
+    """x: (B, S, D) -> (B, S, D)."""
+    xr = _causal_conv(dense(x, p["w_x"]), p["conv_w"].astype(x.dtype),
+                      p["conv_b"].astype(x.dtype))
+    a, u = _gates(p, xr, cfg)                       # (B,S,W) f32
+
+    def combine(left, right):
+        a1, u1 = left
+        a2, u2 = right
+        return a1 * a2, a2 * u1 + u2
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    y = h.astype(x.dtype) * jax.nn.gelu(dense(x, p["w_y"]))
+    out = dense(y, p["w_out"])
+    if return_state:
+        # final hidden state + conv tail (pre-conv branch input)
+        xpre = dense(x, p["w_x"])
+        cache = {
+            "h": h[:, -1].astype(jnp.float32),
+            "conv": xpre[:, -(cfg.rglru.conv_width - 1):, :].astype(jnp.float32),
+        }
+        return out, cache
+    return out
+
+
+def rglru_cache_struct(cfg: ModelConfig, batch: int, abstract: bool = False):
+    w = _width(cfg)
+    shapes = {"h": (batch, w), "conv": (batch, cfg.rglru.conv_width - 1, w)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(v, jnp.float32) for k, v in shapes.items()}
+    return {k: jnp.zeros(v, jnp.float32) for k, v in shapes.items()}
+
+
+def rglru_decode(p: dict, x, cfg: ModelConfig, cache: dict):
+    """Single-token decode. x (B,1,D)."""
+    xpre = dense(x, p["w_x"])                        # (B,1,W)
+    window = jnp.concatenate([cache["conv"].astype(x.dtype), xpre], axis=1)
+    xr = (window * p["conv_w"].astype(x.dtype)[None]).sum(axis=1, keepdims=True) \
+        + p["conv_b"].astype(x.dtype)[None, None]
+    a, u = _gates(p, xr, cfg)                        # (B,1,W)
+    h = a[:, 0] * cache["h"] + u[:, 0]               # (B,W)
+    y = h[:, None].astype(x.dtype) * jax.nn.gelu(dense(x, p["w_y"]))
+    out = dense(y, p["w_out"])
+    return out, {"h": h, "conv": window[:, 1:].astype(jnp.float32)}

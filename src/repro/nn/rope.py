@@ -1,0 +1,44 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the head_dim/2 frequency bands into sections (temporal,
+height, width); each section takes its rotation angle from the matching
+component of a 3-row position-id tensor. Text tokens carry identical
+(t, h, w) ids, making M-RoPE degenerate to RoPE for them.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, H, S, Dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: tuple[int, ...]):
+    """x: (B, H, S, Dh); positions3: (3, B, S) int32; sections sum = Dh/2."""
+    dh = x.shape[-1]
+    assert sum(sections) == dh // 2, (sections, dh)
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    # pick the position row per frequency band
+    band = jnp.repeat(
+        jnp.arange(len(sections)),
+        jnp.array(sections),
+        total_repeat_length=dh // 2,
+    )                                                    # (Dh/2,) in {0,1,2}
+    pos = positions3[band]                               # (Dh/2, B, S)
+    ang = pos.transpose(1, 2, 0)[:, None].astype(jnp.float32) * freqs  # (B,1,S,Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

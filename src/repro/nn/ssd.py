@@ -1,0 +1,222 @@
+"""Mamba2 (SSD — state-space duality) block, chunked matmul formulation.
+
+The SSD algorithm is itself a blocking dataflow (DESIGN.md §4): the
+sequence is split into chunks; *intra*-chunk work becomes dense matmuls
+batched over the chunk axis (one einsum, no unrolled loop — HLO FLOPs are
+exact), and the *inter*-chunk first-order recurrence over per-chunk states
+runs as a log-depth ``associative_scan`` (statically unrolled by XLA, so it
+is costed correctly too — a lax.scan here would be undercounted by the
+cost model; see DESIGN.md §5).
+
+Shapes: d_in = expand·d_model, H heads of P = head_dim, G state groups,
+N = d_state. Conv is a width-4 depthwise causal conv over (x, B, C).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn.layers import Leaf, dense, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nheads, conv_ch
+
+
+def ssd_struct(leaf: Leaf, prefix: str, cfg: ModelConfig) -> dict:
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    in_dim = 2 * d_in + 2 * s.n_groups * s.d_state + nheads
+    return {
+        "in_proj": leaf(f"{prefix}.in_proj", (d, in_dim), ("embed", "ssm_in")),
+        "conv_w": leaf(f"{prefix}.conv_w", (s.d_conv, conv_ch),
+                       ("conv_w", "ssm_conv"), scale=0.5),
+        "conv_b": leaf(f"{prefix}.conv_b", (conv_ch,), ("ssm_conv",), init="zeros"),
+        "A_log": leaf(f"{prefix}.A_log", (nheads,), ("ssm_heads",), init="ssm_A"),
+        "D": leaf(f"{prefix}.D", (nheads,), ("ssm_heads",), init="ones"),
+        "dt_bias": leaf(f"{prefix}.dt_bias", (nheads,), ("ssm_heads",),
+                        init="dt_bias", scale=(s.dt_min, s.dt_max)),
+        "norm": leaf(f"{prefix}.norm", (d_in,), ("ssm_inner",), init="zeros"),
+        "out_proj": leaf(f"{prefix}.out_proj", (d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (B, L, C), w (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    s, d_in, nheads, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:2 * d_in + 2 * gn]
+    dt = zxbcdt[..., 2 * d_in + 2 * gn:]
+    return z, xbc, dt
+
+
+def _split_xbc(xbc, cfg: ModelConfig):
+    s, d_in, nheads, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    x = xbc[..., :d_in]
+    b = xbc[..., d_in:d_in + gn]
+    c = xbc[..., d_in + gn:]
+    return x, b, c
+
+
+def _ssd_scan(x, dt, a_log, b, c, cfg: ModelConfig, init_state=None):
+    """Chunked SSD. x (B,L,H,P); dt (B,L,H); b/c (B,L,G,N).
+    Returns y (B,L,H,P), final_state (B,H,P,N)."""
+    s = cfg.ssm
+    bt, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    q = min(s.chunk_size, l)
+    pad = (-l) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lp = l + pad
+    nc = lp // q
+    hpg = h // g  # heads per state group
+
+    A = -jnp.exp(a_log.astype(jnp.float32))                  # (H,) negative
+    dt32 = dt.astype(jnp.float32)
+    a = dt32 * A[None, None, :]                              # (B,L,H) log-decay
+    xc = x.reshape(bt, nc, q, h, p).astype(jnp.float32)
+    ac = a.reshape(bt, nc, q, h)
+    dtc = dt32.reshape(bt, nc, q, h)
+    bc_ = b.reshape(bt, nc, q, g, n).astype(jnp.float32)
+    cc = c.reshape(bt, nc, q, g, n).astype(jnp.float32)
+
+    cum_a = jnp.cumsum(ac, axis=2)                           # (B,nc,Q,H)
+
+    # expand state groups to heads (G -> H; heads h map to group h // hpg)
+    if g == 1:
+        bh = jnp.broadcast_to(bc_[:, :, :, 0:1, :], (bt, nc, q, h, n))
+        ch = jnp.broadcast_to(cc[:, :, :, 0:1, :], (bt, nc, q, h, n))
+    else:
+        bh = jnp.repeat(bc_, hpg, axis=3)
+        ch = jnp.repeat(cc, hpg, axis=3)
+
+    # ---- intra-chunk (dense, batched over chunks) ----
+    seg = cum_a[:, :, :, None, :] - cum_a[:, :, None, :, :]  # (B,nc,q,s,H)
+    tril = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(tril[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bnqhk,bnshk->bnhqs", ch, bh)            # (B,nc,H,Q,Q)
+    dt_s = dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]       # (B,nc,H,1,Q=s)
+    m = cb * l_mat.transpose(0, 1, 4, 2, 3) * dt_s           # (B,nc,H,q,s)
+    y = jnp.einsum("bnhqs,bnshp->bnqhp", m, xc)
+
+    # ---- chunk states ----
+    decay_out = jnp.exp(cum_a[:, :, -1:, :] - cum_a)         # (B,nc,Q,H)
+    su = jnp.einsum("bnqh,bnqhk,bnqhp->bnhpk", decay_out * dtc, bh, xc)
+
+    # ---- inter-chunk recurrence (associative scan over chunks) ----
+    chunk_decay = jnp.exp(cum_a[:, :, -1, :])                # (B,nc,H)
+    if init_state is not None:
+        # fold the incoming state in as a virtual chunk 0 contribution
+        su = su.at[:, 0].add(chunk_decay[:, 0, :, None, None] *
+                             init_state.astype(jnp.float32))
+
+    def combine(left, right):
+        a1, s1 = left
+        a2, s2 = right
+        return a1 * a2, a2[..., None, None] * s1 + s2
+
+    scan_a, scan_s = jax.lax.associative_scan(
+        combine, (chunk_decay, su), axis=1)
+    # state entering chunk n = scanned result of chunk n-1
+    prev = jnp.concatenate(
+        [jnp.zeros_like(scan_s[:, :1]), scan_s[:, :-1]], axis=1)
+
+    y_inter = jnp.einsum("bnqh,bnqhk,bnhpk->bnqhp", jnp.exp(cum_a), ch, prev)
+    y = (y + y_inter).reshape(bt, lp, h, p)[:, :l]
+    final_state = scan_s[:, -1]                              # (B,H,P,N)
+    return y, final_state
+
+
+def ssd_apply(p: dict, x, cfg: ModelConfig):
+    """Full-sequence Mamba2 mixer. x (B,S,D) -> (B,S,D)."""
+    out, _ = ssd_prefill_cache(p, x, cfg)
+    return out
+
+
+def ssd_cache_struct(cfg: ModelConfig, batch: int, abstract: bool = False):
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    shapes = {
+        "state": (batch, nheads, s.head_dim, s.d_state),
+        "conv": (batch, s.d_conv - 1, conv_ch),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(v, jnp.float32) for k, v in shapes.items()}
+    return {k: jnp.zeros(v, jnp.float32) for k, v in shapes.items()}
+
+
+def ssd_prefill_cache(p: dict, x, cfg: ModelConfig):
+    """Run the mixer over the prompt AND return (out, cache) for decode."""
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    bt, l, d = x.shape
+    zxbcdt = dense(x, p["in_proj"])
+    z, xbc_pre, dt = _split_proj(zxbcdt, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc_pre, p["conv_w"].astype(x.dtype),
+                                   p["conv_b"].astype(x.dtype)))
+    xs, b, c = _split_xbc(xbc, cfg)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    xh = xs.reshape(bt, l, nheads, s.head_dim)
+    bg = b.reshape(bt, l, s.n_groups, s.d_state)
+    cg = c.reshape(bt, l, s.n_groups, s.d_state)
+    y, state = _ssd_scan(xh, dtp, p["A_log"], bg, cg, cfg)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bt, l, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = dense(y, p["out_proj"])
+    cache = {
+        "state": state,
+        "conv": xbc_pre[:, -(s.d_conv - 1):, :].astype(jnp.float32),
+    }
+    return out, cache
+
+
+def ssd_decode(p: dict, x, cfg: ModelConfig, cache: dict):
+    """Single-token decode. x (B,1,D); cache: state (B,H,P,N), conv
+    (B, d_conv-1, conv_ch)."""
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    bt = x.shape[0]
+    zxbcdt = dense(x, p["in_proj"])                          # (B,1,·)
+    z, xbc_new, dt = _split_proj(zxbcdt, cfg)
+    window = jnp.concatenate([cache["conv"].astype(x.dtype), xbc_new], axis=1)
+    conv_out = (window * p["conv_w"].astype(x.dtype)[None]).sum(axis=1, keepdims=True) \
+        + p["conv_b"].astype(x.dtype)[None, None]
+    xbc = jax.nn.silu(conv_out)                              # (B,1,conv_ch)
+    xs, b, c = _split_xbc(xbc, cfg)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])[:, 0]
+    xh = xs.reshape(bt, nheads, s.head_dim).astype(jnp.float32)
+    bg = b.reshape(bt, s.n_groups, s.d_state).astype(jnp.float32)
+    cg = c.reshape(bt, s.n_groups, s.d_state).astype(jnp.float32)
+    hpg = nheads // s.n_groups
+    bh = jnp.repeat(bg, hpg, axis=1)                         # (B,H,N)
+    ch = jnp.repeat(cg, hpg, axis=1)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dtp * A[None, :])                           # (B,H)
+    state = cache["state"] * da[..., None, None] + \
+        jnp.einsum("bh,bhp,bhk->bhpk", dtp, xh, bh)
+    y = jnp.einsum("bhpk,bhk->bhp", state, ch) + \
+        p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bt, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = dense(y, p["out_proj"])
+    new_cache = {
+        "state": state,
+        "conv": window[:, 1:, :].astype(jnp.float32),
+    }
+    return out, new_cache

@@ -1,0 +1,92 @@
+"""Batched serving engine: prefill + incremental decode over the unified
+LM's per-layer caches (KV ring buffers for local attention, recurrent
+states for RG-LRU/SSD).
+
+Requests are grouped into fixed batch slots; a batch prefills together
+(prompts padded to the bucket length with left-padding-free semantics:
+shorter prompts simply start decoding earlier positions — their extra
+prefill logits are ignored) and then decodes lock-step with per-request
+stop lengths. Greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # (S,) int32 [or (S, C) for codebooks]
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 => greedy
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: ModelConfig
+    params: dict
+    max_len: int = 512
+
+    def __post_init__(self):
+        cfg = self.cfg
+
+        def _prefill(params, batch):
+            return lm.prefill(params, cfg, batch, self.max_len)
+
+        def _decode(params, batch, caches):
+            return lm.decode_step(params, cfg, batch, caches)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+
+    def generate(self, requests: Sequence[Request], seed: int = 0):
+        """Serve one batch of equal-or-shorter prompts. Returns a list of
+        generated token arrays."""
+        cfg = self.cfg
+        b = len(requests)
+        plen = max(len(r.prompt) for r in requests)
+        assert all(len(r.prompt) == plen for r in requests), \
+            "batch requests by equal prompt length (bucketing upstream)"
+        multi = cfg.n_codebooks > 1
+        shape = (b, plen, cfg.n_codebooks) if multi else (b, plen)
+        toks = np.zeros(shape, np.int32)
+        for i, r in enumerate(requests):
+            toks[i, :len(r.prompt)] = r.prompt
+        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+
+        key = jax.random.key(seed)
+        outs: list[list] = [[] for _ in requests]
+        cur = self._sample(logits[:, 0], requests, key)  # (B,) or (B,C)
+        max_new = max(r.max_new_tokens for r in requests)
+        for step in range(max_new):
+            for i, r in enumerate(requests):
+                if step < r.max_new_tokens:
+                    outs[i].append(np.asarray(cur[i]))
+            if step == max_new - 1:
+                break
+            key, sub = jax.random.split(key)
+            batch = {"tokens": cur[:, None] if not multi else cur[:, None, :],
+                     "pos": jnp.int32(plen + step)}
+            logits, caches = self._decode(self.params, batch, caches)
+            cur = self._sample(logits[:, 0], requests, sub)
+        return [np.stack(o) for o in outs]
+
+    def _sample(self, logits, requests, key):
+        # logits: (B, V) or (B, C, V)
+        greedy = jnp.argmax(logits, axis=-1)
+        temps = jnp.asarray([r.temperature for r in requests], jnp.float32)
+        if float(jnp.max(temps)) == 0.0:
+            return greedy.astype(jnp.int32)
+        t = jnp.maximum(temps, 1e-4)
+        while t.ndim < logits.ndim - 1:
+            t = t[:, None]
+        sampled = jax.random.categorical(key, logits / t[..., None], axis=-1)
+        return jnp.where((temps <= 0)[:, None] if logits.ndim == 3
+                         else temps <= 0, greedy, sampled).astype(jnp.int32)

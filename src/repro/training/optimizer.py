@@ -1,0 +1,108 @@
+"""Optimizers and LR schedules (pure JAX, no external deps).
+
+AdamW keeps f32 first/second moments regardless of param dtype (params may
+be bf16; the update is computed in f32 and cast back). Schedules include
+warmup-cosine and MiniCPM's WSD (warmup-stable-decay).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"         # constant | cosine | wsd
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1          # WSD: fraction of steps in decay phase
+
+
+def make_schedule(cfg: AdamWConfig) -> Schedule:
+    w, t = cfg.warmup_steps, cfg.total_steps
+
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(w, 1)
+        if cfg.schedule == "constant":
+            main = jnp.float32(1.0)
+        elif cfg.schedule == "cosine":
+            frac = jnp.clip((s - w) / max(t - w, 1), 0.0, 1.0)
+            main = 0.5 * (1.0 + jnp.cos(math.pi * frac))
+        elif cfg.schedule == "wsd":
+            # MiniCPM: constant ("stable") phase, then exponential-ish decay
+            # over the final decay_frac of training.
+            decay_start = t * (1.0 - cfg.decay_frac)
+            frac = jnp.clip((s - decay_start) / max(t - decay_start, 1), 0.0, 1.0)
+            main = jnp.where(s < decay_start, 1.0, 0.5 ** (frac * 10.0))
+        else:
+            raise ValueError(cfg.schedule)
+        return cfg.lr * jnp.minimum(warm, 1.0) * main
+
+    return sched
+
+
+def adamw_init(params):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig,
+                 schedule: Schedule | None = None):
+    """Returns (new_params, new_opt_state, stats)."""
+    sched = schedule or make_schedule(cfg)
+    step = opt_state["step"] + 1
+    lr = sched(step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2 and cfg.weight_decay > 0:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, stats

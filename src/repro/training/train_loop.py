@@ -1,0 +1,148 @@
+"""Train-step construction + the fault-tolerant training loop.
+
+``make_train_step`` builds the jittable (params, opt_state, batch) ->
+(params, opt_state, metrics) function used both by real CPU training
+(examples/) and by the multi-pod dry-run (launch/dryrun.py lowers exactly
+this function against the production mesh).
+
+``TrainLoop`` adds the production concerns: periodic + preemption-signal
+checkpointing through checkpoint/manager.py, deterministic resume (data
+skip by step), optional int8 gradient compression with error feedback on
+the DP axis, and a straggler log hook.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                      make_schedule)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    rules=None, *, remat: bool = True,
+                    compress_grads: bool = False,
+                    barrier_grads: bool = True) -> Callable:
+    constrain = rules.constrain if rules is not None else (lambda x, a: x)
+    schedule = make_schedule(opt_cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm.loss_fn(p, cfg, batch, constrain=constrain,
+                                 remat=remat))(params)
+        if barrier_grads:
+            # keep the cross-device gradient reductions in the gradients'
+            # native dtype (bf16): without the barrier XLA hoists the
+            # optimizer's f32 upcast above the all-reduce, doubling DP wire
+            # traffic (EXPERIMENTS.md §Perf, command-r E3)
+            grads = jax.lax.optimization_barrier(grads)
+        if compress_grads:
+            from repro.training.compression import compress_decompress
+            grads, err = compress_decompress(grads, opt_state.get("ef"))
+            opt_state = dict(opt_state, ef=err)
+        ef = opt_state.pop("ef", None)
+        new_params, new_opt, stats = adamw_update(grads, opt_state, params,
+                                                  opt_cfg, schedule)
+        if ef is not None:
+            new_opt["ef"] = ef
+        metrics = {"loss": loss, **stats}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, key,
+                     compress_grads: bool = False):
+    params = lm.init_params(cfg, key)
+    opt_state = adamw_init(params)
+    if compress_grads:
+        opt_state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return params, opt_state
+
+
+def abstract_train_state(cfg: ModelConfig):
+    """ShapeDtypeStructs for (params, opt_state) — dry-run stand-ins."""
+    params = lm.abstract_params(cfg)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    opt_state = {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    return params, opt_state
+
+
+def train_state_axes(cfg: ModelConfig):
+    """Logical-axes trees matching abstract_train_state."""
+    from repro.nn.layers import Axes
+    axes = lm.param_axes(cfg)
+    opt_axes = {
+        "m": axes,
+        "v": axes,
+        "step": Axes(()),
+    }
+    return axes, opt_axes
+
+
+@dataclasses.dataclass
+class TrainLoop:
+    """Fault-tolerant loop: checkpoint/restart, preemption save, metrics."""
+
+    cfg: ModelConfig
+    opt_cfg: AdamWConfig
+    data_iter: Any                       # step-indexable: data_iter(step)->batch
+    ckpt_manager: Any = None             # checkpoint.manager.CheckpointManager
+    ckpt_every: int = 100
+    log_every: int = 10
+    straggler_warn_s: float = 5.0        # log steps slower than this
+
+    def run(self, params, opt_state, num_steps: int, *, train_step=None,
+            start_step: int = 0, log: Callable[[str], None] = print):
+        step_fn = train_step or jax.jit(
+            make_train_step(self.cfg, self.opt_cfg), donate_argnums=(0, 1))
+
+        # resume: restore latest checkpoint if present
+        if self.ckpt_manager is not None:
+            restored = self.ckpt_manager.restore_latest((params, opt_state))
+            if restored is not None:
+                (params, opt_state), start_step = restored
+                log(f"[resume] restored checkpoint at step {start_step}")
+
+        preempted = {"flag": False}
+
+        def _on_signal(signum, frame):  # graceful preemption save
+            preempted["flag"] = True
+
+        old = signal.signal(signal.SIGTERM, _on_signal)
+        losses = []
+        try:
+            t_prev = time.monotonic()
+            for step in range(start_step, num_steps):
+                batch = self.data_iter(step)   # deterministic by step => resume-safe
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+                if step % self.log_every == 0 or step == num_steps - 1:
+                    loss = float(metrics["loss"])
+                    losses.append((step, loss))
+                    dt = time.monotonic() - t_prev
+                    log(f"step {step:5d} loss {loss:.4f} "
+                        f"lr {float(metrics['lr']):.2e} {dt:.2f}s")
+                    if dt > self.straggler_warn_s:
+                        log(f"[straggler] step {step} took {dt:.2f}s")
+                t_prev = time.monotonic()
+                if self.ckpt_manager is not None and (
+                        (step + 1) % self.ckpt_every == 0 or preempted["flag"]):
+                    self.ckpt_manager.save((params, opt_state), step + 1)
+                    if preempted["flag"]:
+                        log(f"[preempt] checkpoint saved at step {step + 1}")
+                        break
+        finally:
+            signal.signal(signal.SIGTERM, old)
+        return params, opt_state, losses

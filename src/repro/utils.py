@@ -1,0 +1,34 @@
+"""Small shared utilities."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def pad_to(x, size: int, axis: int = 0, value=0.0):
+    """Pad numpy/jax array along `axis` up to `size`."""
+    import jax.numpy as jnp
+
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    if isinstance(x, np.ndarray):
+        return np.pad(x, widths, constant_values=value)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f} {unit}"
+        n /= 1024.0
+    return f"{n:.2f} PiB"

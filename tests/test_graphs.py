@@ -1,0 +1,91 @@
+"""Graph partitioning + MoE routing property tests."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sharding import shard_graph
+from repro.graphs.datasets import make_dataset
+from repro.graphs.partition import balance_report, partition_graph
+
+
+class TestPartition:
+    def test_comm_matrix_conserves_edges(self):
+        ds = make_dataset("cora")
+        sg = shard_graph(ds.edges, ds.profile.num_nodes, n=256)
+        plan = partition_graph(sg, n_data=4)
+        assert plan.comm_matrix.sum() == sg.num_edges
+
+    @settings(max_examples=10, deadline=None)
+    @given(n_data=st.sampled_from([2, 4, 8]), n=st.sampled_from([64, 128]))
+    def test_property_partition_conserves(self, n_data, n):
+        r = np.random.default_rng(n_data * 100 + n)
+        edges = r.integers(0, 500, (2000, 2))
+        sg = shard_graph(edges, 500, n=n)
+        plan = partition_graph(sg, n_data)
+        assert plan.comm_matrix.sum() == sg.num_edges
+        rep = balance_report(sg, n_data)
+        assert rep["imbalance"] >= 1.0
+        assert 0.0 <= rep["cross_group_edge_frac"] <= 1.0
+
+    def test_transfer_bytes_scale_with_features(self):
+        ds = make_dataset("citeseer")
+        sg = shard_graph(ds.edges, ds.profile.num_nodes, n=256)
+        plan = partition_graph(sg, 4)
+        assert plan.transfer_bytes_per_layer(64) * 2 == pytest.approx(
+            plan.transfer_bytes_per_layer(128))
+
+
+class TestMoEProperties:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 99), top_k=st.sampled_from([1, 2, 4]))
+    def test_router_weight_conservation(self, seed, top_k):
+        """Sum of combine weights per token == 1 with softmax routing
+        (when nothing is dropped)."""
+        import dataclasses
+        from repro.configs.registry import get_smoke
+        from repro.nn.layers import init_leaf
+        from repro.nn.moe import moe_apply, moe_struct
+        cfg = get_smoke("qwen2-moe-a2.7b")
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, top_k=top_k, capacity_factor=float(cfg.moe.num_experts),
+            n_shared_experts=0))
+        leaf = init_leaf(jax.random.key(seed), jnp.float32)
+        p = moe_struct(leaf, "m", cfg)
+        r = np.random.default_rng(seed)
+        x = jnp.asarray(r.standard_normal((2, 8, cfg.d_model)), jnp.float32)
+        # identity experts: w_gate=w_up such that silu(g)*u ≈ passthrough is
+        # hard; instead check LINEARITY in the combine weights: scaling all
+        # expert outputs by c scales y by c
+        y1 = moe_apply(p, x, cfg)
+        p2 = dict(p, w_down=p["w_down"] * 2.0)
+        y2 = moe_apply(p2, x, cfg)
+        np.testing.assert_allclose(np.asarray(y2), 2 * np.asarray(y1),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_no_token_crosses_rows(self):
+        """Batched dispatch is row-local: changing row 1's tokens must not
+        change row 0's output (the GSPMD-locality invariant)."""
+        from repro.configs.registry import get_smoke
+        from repro.nn.layers import init_leaf
+        from repro.nn.moe import moe_apply, moe_struct
+        cfg = get_smoke("llama4-scout-17b-a16e")
+        leaf = init_leaf(jax.random.key(0), jnp.float32)
+        p = moe_struct(leaf, "m", cfg)
+        r = np.random.default_rng(0)
+        x = jnp.asarray(r.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+        y = moe_apply(p, x, cfg)
+        x2 = x.at[1].set(jnp.asarray(
+            r.standard_normal((16, cfg.d_model)), jnp.float32))
+        y2 = moe_apply(p, x2, cfg)
+        np.testing.assert_allclose(np.asarray(y2[0]), np.asarray(y[0]),
+                                   atol=1e-5)
+
+    def test_decode_capacity_has_no_floor_waste(self):
+        """E10: with T=1 per row, capacity must be exactly top_k-bounded."""
+        from repro.nn.moe import _capacity
+        from repro.configs.registry import get_smoke
+        m = get_smoke("llama4-scout-17b-a16e").moe
+        assert _capacity(1, m) == 1 * m.top_k
+        assert _capacity(4096, m) >= 4096 * m.top_k / m.num_experts

@@ -1,0 +1,133 @@
+"""Serving-path invariants: prefill + decode must reproduce the full
+forward pass position-for-position (exactly for dense/hybrid/SSM archs;
+for MoE archs with no-drop capacity)."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS, get_smoke
+from repro.models import lm
+
+
+def _nodrop(cfg):
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe,
+                                     capacity_factor=float(cfg.moe.num_experts)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_match_forward(arch):
+    cfg = _nodrop(get_smoke(arch))
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    b, s, max_len = 2, 24, 32
+
+    if cfg.input_mode == "embeddings":
+        emb = jnp.asarray(rng.standard_normal((b, s + 1, cfg.d_model)),
+                          jnp.float32)
+        full_batch = {"embeddings": emb}
+        pre_batch = {"embeddings": emb[:, :s]}
+        dec_batch = {"embeddings": emb[:, s:s + 1], "pos": jnp.int32(s)}
+    else:
+        shape = (b, s + 1, cfg.n_codebooks) if cfg.n_codebooks > 1 else (b, s + 1)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, shape), jnp.int32)
+        full_batch = {"tokens": toks}
+        pre_batch = {"tokens": toks[:, :s]}
+        dec_batch = {"tokens": toks[:, s:s + 1], "pos": jnp.int32(s)}
+
+    full = lm.forward(params, cfg, full_batch)
+    logits_pf, caches = lm.prefill(params, cfg, pre_batch, max_len)
+    np.testing.assert_allclose(np.asarray(logits_pf[:, 0]),
+                               np.asarray(full[:, s - 1]), atol=2e-4, rtol=2e-4)
+    logits_dec, caches = lm.decode_step(params, cfg, dec_batch, caches)
+    np.testing.assert_allclose(np.asarray(logits_dec[:, 0]),
+                               np.asarray(full[:, s]), atol=5e-4, rtol=5e-4)
+
+
+def test_local_attention_ring_buffer():
+    """Decode past the window: ring buffer must equal full-buffer attention
+    restricted to the window."""
+    cfg = get_smoke("recurrentgemma-2b")   # window 16
+    params = lm.init_params(cfg, jax.random.key(1))
+    rng = np.random.default_rng(1)
+    b, total = 1, 40
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, total)), jnp.int32)
+    full = lm.forward(params, cfg, {"tokens": toks})
+    # prefill 24, then decode 16 more one-by-one (crosses the ring boundary)
+    s = 24
+    _, caches = lm.prefill(params, cfg, {"tokens": toks[:, :s]}, max_len=total)
+    for pos in range(s, total):
+        logits, caches = lm.decode_step(
+            params, cfg, {"tokens": toks[:, pos:pos + 1],
+                          "pos": jnp.int32(pos)}, caches)
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, pos]),
+                                   atol=5e-4, rtol=5e-4)
+
+
+def test_mrope_text_degenerates_to_rope():
+    """M-RoPE with identical (t,h,w) ids == standard RoPE (paper property
+    of Qwen2-VL): verify via the attention module directly."""
+    from repro.nn.rope import apply_mrope, apply_rope
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((2, 4, 8, 16)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (2, 8))
+    pos3 = jnp.broadcast_to(pos, (3, 2, 8))
+    a = apply_rope(x, pos, 10000.0)
+    b = apply_mrope(x, pos3, 10000.0, (2, 3, 3))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_ssd_matches_sequential_scan():
+    """Chunked SSD (matmul form) == naive sequential state recurrence."""
+    from repro.models.config import SSMConfig
+    from repro.nn.ssd import _ssd_scan
+    rng = np.random.default_rng(3)
+    bt, l, h, p, n = 2, 24, 4, 8, 16
+    cfg = get_smoke("mamba2-1.3b")
+    cfg = dataclasses.replace(cfg, ssm=SSMConfig(
+        d_state=n, head_dim=p, expand=2, n_groups=1, chunk_size=8))
+    x = jnp.asarray(rng.standard_normal((bt, l, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (bt, l, h)), jnp.float32)
+    a_log = jnp.asarray(rng.uniform(0.0, 1.0, (h,)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((bt, l, 1, n)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((bt, l, 1, n)), jnp.float32)
+    y, state = _ssd_scan(x, dt, a_log, b, c, cfg)
+
+    # naive recurrence
+    A = -np.exp(np.asarray(a_log))
+    st = np.zeros((bt, h, p, n), np.float64)
+    ys = np.zeros((bt, l, h, p), np.float64)
+    xn, dtn, bn, cn = map(np.asarray, (x, dt, b, c))
+    for t in range(l):
+        da = np.exp(dtn[:, t] * A[None])                     # (bt,h)
+        st = st * da[..., None, None] + np.einsum(
+            "bh,bhp,bn->bhpn", dtn[:, t], xn[:, t], bn[:, t, 0])
+        ys[:, t] = np.einsum("bhpn,bn->bhp", st, cn[:, t, 0])
+    np.testing.assert_allclose(np.asarray(y), ys, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(state), st, atol=1e-3, rtol=1e-3)
+
+
+def test_rglru_matches_sequential():
+    """Associative-scan RG-LRU == per-step recurrence."""
+    from repro.nn.rglru import rglru_apply, rglru_decode, rglru_cache_struct
+    cfg = get_smoke("recurrentgemma-2b")
+    from repro.nn.layers import init_leaf
+    from repro.nn.rglru import rglru_struct
+    p = rglru_struct(init_leaf(jax.random.key(4), jnp.float32), "t", cfg)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((2, 12, cfg.d_model)), jnp.float32)
+    full = rglru_apply(p, x, cfg)
+    cache = rglru_cache_struct(cfg, 2)
+    outs = []
+    for t in range(12):
+        o, cache = rglru_decode(p, x[:, t:t + 1], cfg, cache)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(seq), np.asarray(full),
+                               atol=2e-4, rtol=2e-4)
