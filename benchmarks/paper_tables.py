@@ -10,7 +10,7 @@ import numpy as np
 from repro.core.dataflow import Dataflow, best_order, simulate_traffic, table1_costs
 from repro.core.perf_model import (GNNERATOR, GNNERATOR_NOBLOCK, GPU_2080TI,
                                    HYGCN, model_time, speedup_table)
-from repro.graphs.datasets import DATASETS
+from repro.graphs.datasets import TABLE2_DATASETS as DATASETS
 
 
 def bench_table1():

@@ -24,6 +24,7 @@ def _run(name: str, fn, *args):
 
 
 def main() -> None:
+    from benchmarks.gnn_serve import bench_gnn_serve
     from benchmarks.kernel_bench import bench_kernels
     from benchmarks.paper_tables import (bench_fig3, bench_fig4, bench_fig5,
                                          bench_table1, bench_table5)
@@ -37,6 +38,7 @@ def main() -> None:
     all_rows["fig4_block_sweep"] = _run("fig4_block_sweep", bench_fig4)
     all_rows["fig5_scaling"] = _run("fig5_scaling", bench_fig5)
     all_rows["kernels"] = _run("kernels_microbench", bench_kernels)
+    all_rows["gnn_serve"] = _run("gnn_serve", bench_gnn_serve)
     all_rows["roofline"] = _run("roofline", bench_roofline)
 
     print("\n=== detailed tables ===", file=sys.stderr)

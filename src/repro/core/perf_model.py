@@ -29,7 +29,8 @@ import dataclasses
 
 from repro.core.dataflow import Dataflow, simulate_traffic
 from repro.core.sharding import max_shard_nodes_for_budget
-from repro.graphs.datasets import DATASETS, GraphProfile
+from repro.graphs.datasets import (DATASETS, TABLE2_DATASETS,
+                                   GraphProfile)
 
 # --------------------------------------------------------------------------
 # Platforms (paper Table IV) + calibration constants
@@ -121,7 +122,7 @@ def network_layers(network: str, prof: GraphProfile,
 _F32 = 4
 
 
-def _graph_stage(p: Platform, w: LayerWork, block_b: int,
+def graph_stage_time(p: Platform, w: LayerWork, block_b: int,
                  sparsity_elim: float = 1.0) -> tuple[float, int]:
     """Aggregation time (s): max(compute, off-chip shard traffic).
 
@@ -147,7 +148,7 @@ def _graph_stage(p: Platform, w: LayerWork, block_b: int,
     return max(t_cmp, t_mem, t_edge) / sparsity_elim, df.num_blocks
 
 
-def _dense_stage(p: Platform, w: LayerWork, block_b: int) -> float:
+def dense_stage_time(p: Platform, w: LayerWork, block_b: int) -> float:
     flops = 2.0 * w.n_nodes * w.d_in * w.d_out + w.extra_dense_flops
     b = min(block_b, w.d_in) if p.blocking else w.d_in
     util = min(1.0, b / p.dense_width) if p.blocking else 1.0
@@ -169,8 +170,8 @@ def _dense_stage(p: Platform, w: LayerWork, block_b: int) -> float:
 
 def layer_time(p: Platform, w: LayerWork, block_b: int = 64,
                sparsity_elim: float = 1.0) -> float:
-    t_graph, n_blocks = _graph_stage(p, w, block_b, sparsity_elim)
-    t_dense = _dense_stage(p, w, block_b)
+    t_graph, n_blocks = graph_stage_time(p, w, block_b, sparsity_elim)
+    t_dense = dense_stage_time(p, w, block_b)
     if p.name == "gpu":
         # single compute pool, stages serialized + launch overhead
         return t_graph + t_dense + 2 * CALIBRATION["gpu_launch_us"] * 1e-6
@@ -194,7 +195,7 @@ def speedup_table(block_b: int = 64) -> dict:
     """Fig 3 + Table V reproduction: speedups vs the GPU baseline."""
     out: dict = {}
     for net in ("gcn", "graphsage", "graphsage_pool"):
-        for ds in DATASETS:
+        for ds in TABLE2_DATASETS:
             t_gpu = model_time(GPU_2080TI, net, ds)
             row = {
                 "gpu_ms": t_gpu * 1e3,

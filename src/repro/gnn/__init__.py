@@ -1,0 +1,11 @@
+"""End-to-end GNN model zoo + layer execution planning (``repro.gnn``).
+
+``models``   — multi-layer GCN / GraphSAGE(mean,max) / GIN / GAT assembled
+               from the Dense/Graph engine primitives (core/engines.py) and
+               Pallas kernels (kernels/ops.py).
+``executor`` — per-layer (S, B, order, fused?) planning via the Table-I
+               cost model in core/dataflow.py + core/perf_model.py.
+"""
+from repro.gnn.executor import LayerPlan, ModelPlan, plan_model  # noqa: F401
+from repro.gnn.models import (ARCHS, ZooSpec, build_zoo_graph,  # noqa: F401
+                              graph_signature, init_zoo, zoo_forward)

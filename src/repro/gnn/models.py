@@ -1,0 +1,237 @@
+"""GNN model zoo on the GNNerator engines (VersaGNN-style coverage).
+
+Every architecture is assembled from the same two engines the paper builds
+in silicon — the Dense Engine (blocked systolic matmul + activation unit)
+and the Graph Engine (shard-grid aggregation with dimension blocking) —
+composed by the GNNeratorController. Per layer, an executor-provided
+:class:`repro.gnn.executor.LayerPlan` picks the feature block size B and
+whether the two stages run fused (h_agg never leaves VMEM) or two-stage
+through feature memory.
+
+Architectures (all multi-layer, relu between layers, logits at the end):
+
+  gcn        H' = act(Â H W)                       graph-first, fusable
+  sage_mean  H' = act(W [mean_N∪u(H); H])          graph-first
+  sage_max   z = relu(H W_p + b_p); z̄ = max_N z;
+             H' = act(W [z̄; H])                    dense-first (pool)
+  gin        H' = MLP((1+ε) H + Σ_N H)             graph-first, ε learnable
+  gat        H' = act(‖_heads Σ_u α_vu z_u)        attention-weighted shard
+                                                   SpMM (α baked into the
+                                                   block grid per head)
+
+The GAT attention weights are computed per shard pair as an (S, S, n, n)
+head-block tensor and fed straight to the shard-grid SpMM kernel — the
+aggregation stays on the Graph Engine; only the masked softmax runs on the
+activation unit (plain jnp here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engines import (DenseEngine, GNNeratorController, GraphEngine,
+                                GraphTensors)
+from repro.core.sharding import shard_graph
+from repro.kernels import ops
+
+ARCHS = ("gcn", "sage_mean", "sage_max", "gin", "gat")
+
+# arch -> (edge-weight normalization baked into the shard blocks,
+#          add self loops when sharding)
+_GRAPH_SIG = {
+    "gcn": ("gcn", True),
+    "sage_mean": ("mean", True),
+    "sage_max": ("sum", True),    # gather path; binary blocks — shares the
+                                  # cached GraphTensors with gat
+    "gin": ("sum", False),        # (1+ε)·h term replaces the self loop
+    "gat": ("sum", True),         # binary mask; α supplies the weights
+}
+
+
+def graph_signature(arch: str) -> tuple[str, bool]:
+    """(normalize, add_self_loops) a model needs its GraphTensors built with.
+
+    Serving keys its graph-tensor cache on exactly this signature: two
+    models with the same signature share one sharded graph (GNNIE-style
+    graph-specific caching).
+    """
+    return _GRAPH_SIG[arch]
+
+
+def build_zoo_graph(edges: np.ndarray, num_nodes: int, n: int,
+                    arch: str) -> GraphTensors:
+    """Shard + normalize a graph for the given zoo architecture."""
+    norm, loops = graph_signature(arch)
+    sg = shard_graph(edges, num_nodes, n, normalize=norm,
+                     add_self_loops=loops)
+    return GraphTensors.from_sharded(sg)
+
+
+@dataclasses.dataclass(frozen=True)
+class ZooSpec:
+    arch: str
+    in_dim: int
+    hidden_dim: int
+    out_dim: int
+    num_layers: int = 2
+    heads: int = 2                 # GAT hidden layers (output layer: 1 head)
+    eps_init: float = 0.0          # GIN ε initial value (learnable)
+    negative_slope: float = 0.2    # GAT LeakyReLU
+
+    def __post_init__(self):
+        if self.arch not in ARCHS:
+            raise ValueError(f"unknown arch {self.arch!r}; choose {ARCHS}")
+        if self.num_layers < 1:
+            raise ValueError("need at least one layer")
+        if self.arch == "gat" and self.hidden_dim % self.heads:
+            raise ValueError("gat: hidden_dim must divide by heads")
+
+    @property
+    def layer_dims(self) -> list[tuple[int, int]]:
+        dims = ([self.in_dim] + [self.hidden_dim] * (self.num_layers - 1)
+                + [self.out_dim])
+        return list(zip(dims[:-1], dims[1:]))
+
+    def agg_dim(self, layer: int) -> int:
+        """Feature dim live at aggregation time (what the planner blocks)."""
+        din, dout = self.layer_dims[layer]
+        if self.arch == "gat":
+            # aggregation runs over z = h W (all heads)
+            return dout
+        return din   # gcn/sage_mean/gin aggregate h; sage_max pools at din
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+def init_zoo(key: jax.Array, spec: ZooSpec) -> dict:
+    """Param pytree: {"layers": [per-layer dict]}."""
+    layers = []
+    for i, (din, dout) in enumerate(spec.layer_dims):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        if spec.arch == "gcn":
+            layer = {"w": _glorot(k1, (din, dout))}
+        elif spec.arch == "sage_mean":
+            layer = {"w": _glorot(k1, (2 * din, dout))}
+        elif spec.arch == "sage_max":
+            layer = {"w_pool": _glorot(k1, (din, din)),
+                     "b_pool": jnp.zeros((din,), jnp.float32),
+                     "w": _glorot(k2, (2 * din, dout))}
+        elif spec.arch == "gin":
+            layer = {"eps": jnp.float32(spec.eps_init),
+                     "w1": _glorot(k1, (din, dout)),
+                     "b1": jnp.zeros((dout,), jnp.float32),
+                     "w2": _glorot(k2, (dout, dout)),
+                     "b2": jnp.zeros((dout,), jnp.float32)}
+        elif spec.arch == "gat":
+            heads = spec.heads if i < spec.num_layers - 1 else 1
+            hd = dout // heads
+            if heads * hd != dout:
+                raise ValueError(f"gat layer {i}: {dout} !% {heads} heads")
+            layer = {"w": _glorot(k1, (din, heads * hd)),
+                     "a_src": _glorot(k2, (heads, hd)),
+                     "a_dst": _glorot(k3, (heads, hd))}
+        layers.append(layer)
+    return {"layers": layers}
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _controller(plan) -> GNNeratorController:
+    b = plan.B if plan is not None else 128
+    fused = plan.fused if plan is not None else True
+    return GNNeratorController(dense=DenseEngine(),
+                               graph=GraphEngine(block_b=b), fuse=fused)
+
+
+def _gat_attention_blocks(gt: GraphTensors, z_head: jax.Array,
+                          s_src: jax.Array, s_dst: jax.Array,
+                          negative_slope: float) -> jax.Array:
+    """Per-head attention weights laid out on the shard grid.
+
+    z_head: (S, n, F) head features; s_src/s_dst: (S, n) attention scores.
+    Returns α as (S, S, n, n) blocks [dst_shard, src_shard, v, u] ready for
+    the shard-grid SpMM kernel.
+    """
+    mask = gt.blocks != 0                                   # (S, S, n, n)
+    logits = s_dst[:, None, :, None] + s_src[None, :, None, :]
+    logits = jax.nn.leaky_relu(logits, negative_slope)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    # masked softmax over ALL of v's in-neighbors: axes (src_shard, u)
+    m = jnp.max(logits, axis=(1, 3), keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.where(mask, jnp.exp(logits - m), 0.0)
+    denom = jnp.sum(e, axis=(1, 3), keepdims=True)
+    return jnp.where(denom > 0, e / jnp.maximum(denom, 1e-30), 0.0)
+
+
+def _gat_layer(spec: ZooSpec, layer: dict, gt: GraphTensors, h: jax.Array,
+               ctrl: GNNeratorController, *, activation: str) -> jax.Array:
+    s, n, din = h.shape
+    heads, hd = layer["a_src"].shape
+    z = ctrl.dense(h.reshape(s * n, din), layer["w"])       # (S·n, H·hd)
+    z = z.reshape(s, n, heads, hd)
+    s_src = jnp.einsum("snhf,hf->snh", z.astype(jnp.float32),
+                       layer["a_src"].astype(jnp.float32))
+    s_dst = jnp.einsum("snhf,hf->snh", z.astype(jnp.float32),
+                       layer["a_dst"].astype(jnp.float32))
+    outs = []
+    for hix in range(heads):   # heads stay sequential: one α grid in VMEM
+        alpha = _gat_attention_blocks(gt, z[..., hix, :],
+                                      s_src[..., hix], s_dst[..., hix],
+                                      spec.negative_slope)
+        outs.append(ops.graph_aggregate(alpha, z[..., hix, :],
+                                        block_b=ctrl.graph.block_b))
+    out = jnp.concatenate(outs, axis=-1)                    # (S, n, H·hd)
+    if activation == "relu":
+        out = jax.nn.relu(out)
+    return out
+
+
+def zoo_forward(spec: ZooSpec, params: dict, gt: GraphTensors,
+                h: jax.Array, *, plans: Sequence | None = None) -> jax.Array:
+    """Run the model; h is (S, n, in_dim) shard-grouped (GraphTensors.group).
+
+    ``plans`` is an optional per-layer sequence of LayerPlans from
+    repro.gnn.executor; None falls back to the default controller (fused
+    where legal, B=128).
+    """
+    n_layers = len(spec.layer_dims)
+    for i, layer in enumerate(params["layers"]):
+        plan = plans[i] if plans is not None else None
+        ctrl = _controller(plan)
+        act = "relu" if i < n_layers - 1 else "none"
+        if spec.arch == "gcn":
+            h = ctrl.graph_first(gt, h, layer["w"], activation=act)
+        elif spec.arch == "sage_mean":
+            agg = ctrl.graph.aggregate(gt, h, op="linear")  # mean-normalized
+            s, n, d = h.shape
+            cat = jnp.concatenate([agg, h], axis=-1).reshape(s * n, 2 * d)
+            h = ctrl.dense(cat, layer["w"], activation=act).reshape(s, n, -1)
+        elif spec.arch == "sage_max":
+            s, n, d = h.shape
+            z = ctrl.dense(h.reshape(s * n, d), layer["w_pool"],
+                           layer["b_pool"], activation="relu")
+            zbar = ctrl.graph.aggregate(gt, z.reshape(s, n, d), op="max")
+            cat = jnp.concatenate([zbar, h], axis=-1).reshape(s * n, 2 * d)
+            h = ctrl.dense(cat, layer["w"], activation=act).reshape(s, n, -1)
+        elif spec.arch == "gin":
+            agg = ctrl.graph.aggregate(gt, h, op="linear")  # Σ, no self loop
+            x = (1.0 + layer["eps"]) * h + agg
+            s, n, d = x.shape
+            hid = ctrl.dense(x.reshape(s * n, d), layer["w1"], layer["b1"],
+                             activation="relu")
+            h = ctrl.dense(hid, layer["w2"], layer["b2"],
+                           activation=act).reshape(s, n, -1)
+        elif spec.arch == "gat":
+            h = _gat_layer(spec, layer, gt, h, ctrl, activation=act)
+    return gt.ungroup(h)

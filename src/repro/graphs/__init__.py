@@ -1,1 +1,3 @@
-from repro.graphs.datasets import DATASETS, GraphData, make_dataset  # noqa: F401
+from repro.graphs.datasets import (DATASETS, LARGE_DATASETS,  # noqa: F401
+                                   TABLE2_DATASETS, GraphData, load,
+                                   make_dataset)

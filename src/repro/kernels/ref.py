@@ -99,6 +99,81 @@ def seg_gather_agg(edge_src, edge_dst, edge_valid, h_src, n_dst: int, *, op: str
     return out.astype(h_src.dtype)
 
 
+# --------------------------------------------------------------------------
+# GNN model-zoo layer oracles (repro.gnn.models). These operate on FLAT
+# (N, D) features and a densified (N, N) adjacency — the ground truth the
+# shard-grid engine path must reproduce exactly (tests/test_gnn_models.py).
+# The adjacency carries the normalization baked by core.sharding.shard_graph
+# (gcn / mean / sum weights); masks are derived as adj != 0.
+# --------------------------------------------------------------------------
+
+def gcn_layer(adj, h, w, *, activation: str = "none"):
+    """act((Â H) W) — flat GCN layer; adj is the gcn-normalized adjacency."""
+    agg = jnp.dot(adj.astype(jnp.float32), h.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return dense_engine(agg.astype(h.dtype), w, activation=activation)
+
+
+def sage_mean_layer(adj_mean, h, w, *, activation: str = "none"):
+    """act(W [mean_agg(h); h]) — GraphSAGE mean aggregator (adj row-mean)."""
+    agg = jnp.dot(adj_mean.astype(jnp.float32), h.astype(jnp.float32),
+                  preferred_element_type=jnp.float32).astype(h.dtype)
+    return dense_engine(jnp.concatenate([agg, h], axis=-1), w,
+                        activation=activation)
+
+
+def sage_max_pool_layer(adj_mask, h, w_pool, b_pool, w, *,
+                        activation: str = "none"):
+    """GraphSAGE max-pool: z = relu(h W_p + b_p); z̄ = max_N z; act(W [z̄;h])."""
+    z = dense_engine(h, w_pool, b_pool, activation="relu").astype(jnp.float32)
+    mask = (adj_mask != 0)
+    neg = jnp.float32(-jnp.inf)
+    # zbar[v] = max over u in N(v); identity 0 where no neighbors
+    cand = jnp.where(mask[:, :, None], z[None, :, :], neg)
+    zbar = jnp.max(cand, axis=1)
+    zbar = jnp.where(jnp.isfinite(zbar), zbar, 0.0).astype(h.dtype)
+    return dense_engine(jnp.concatenate([zbar, h], axis=-1), w,
+                        activation=activation)
+
+
+def gin_layer(adj_sum, h, eps, w1, b1, w2, b2, *, activation: str = "none"):
+    """GIN: MLP((1+ε) h + Σ_N h); adj_sum has NO self loops (ε handles it)."""
+    agg = jnp.dot(adj_sum.astype(jnp.float32), h.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    x = ((1.0 + eps) * h.astype(jnp.float32) + agg).astype(h.dtype)
+    hid = dense_engine(x, w1, b1, activation="relu")
+    return dense_engine(hid, w2, b2, activation=activation)
+
+
+def gat_layer(adj_mask, h, w, a_src, a_dst, *, negative_slope: float = 0.2,
+              activation: str = "none", concat_heads: bool = True):
+    """Multi-head GAT layer.
+
+    h: (N, D); w: (D, H*F); a_src/a_dst: (H, F); adj_mask: (N, N) nonzero
+    where edge u->v exists at [v, u] (self loops included upstream).
+    α_vu = softmax_u( leakyrelu(a_dst·z_v + a_src·z_u) ), out_v = Σ α z_u.
+    Heads are concatenated (hidden layers) or averaged (output layer).
+    """
+    n = h.shape[0]
+    heads, f = a_src.shape
+    z = jnp.dot(h.astype(jnp.float32), w.astype(jnp.float32),
+                preferred_element_type=jnp.float32).reshape(n, heads, f)
+    s_src = jnp.einsum("nhf,hf->nh", z, a_src.astype(jnp.float32))
+    s_dst = jnp.einsum("nhf,hf->nh", z, a_dst.astype(jnp.float32))
+    logits = s_dst[:, None, :] + s_src[None, :, :]          # (V, U, H)
+    logits = jax.nn.leaky_relu(logits, negative_slope)
+    mask = (adj_mask != 0)[:, :, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    m = jnp.max(logits, axis=1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.where(mask, jnp.exp(logits - m), 0.0)
+    denom = jnp.sum(e, axis=1, keepdims=True)
+    alpha = jnp.where(denom > 0, e / jnp.maximum(denom, 1e-30), 0.0)
+    out = jnp.einsum("vuh,uhf->vhf", alpha, z)
+    out = out.reshape(n, heads * f) if concat_heads else out.mean(axis=1)
+    return _activate(out, activation).astype(h.dtype)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
                     window: int | None = None):
     """Attention oracle: softmax(q k^T * scale + mask) v.

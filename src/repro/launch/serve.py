@@ -1,27 +1,25 @@
-"""Production serving launcher: batched requests through ServeEngine.
+"""Production serving launcher. Two paths share it:
+
+LM generation (default)::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
         --num-requests 8 --prompt-len 32 --new-tokens 32
+
+GNN node classification (repro.gnn zoo + GNNServeEngine)::
+
+    PYTHONPATH=src python -m repro.launch.serve --mode gnn \
+        --graphs cora,citeseer --models gcn,gat --num-requests 64
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
 import numpy as np
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-8b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--num-requests", type=int, default=8)
-    ap.add_argument("--batch-size", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+def _serve_lm(args) -> None:
+    import jax
 
     from repro.configs.registry import get_config, get_smoke
     from repro.models import lm
@@ -53,6 +51,93 @@ def main() -> None:
     dt = time.time() - t0
     print(f"served {args.num_requests} requests, {served} tokens "
           f"in {dt:.2f}s ({served / dt:.1f} tok/s)")
+
+
+def _serve_gnn(args) -> None:
+    from repro.gnn.models import ZooSpec
+    from repro.graphs.datasets import make_dataset
+    from repro.serving.gnn_engine import GNNServeEngine, NodeRequest
+
+    graphs = [g.strip() for g in args.graphs.split(",") if g.strip()]
+    models = [m.strip() for m in args.models.split(",") if m.strip()]
+
+    from repro.graphs.datasets import DATASETS
+
+    engine = GNNServeEngine(max_shard_n=args.shard_n)
+    datasets = {}
+    for g in graphs:
+        # pre-check against the engine's densification limit BEFORE paying
+        # for edge generation (full reddit: ~115M edges, minutes of work)
+        est_nodes = int(DATASETS[g].num_nodes * args.scale)
+        if est_nodes ** 2 * 4 > engine.max_dense_gib * 2 ** 30:
+            raise SystemExit(
+                f"graph {g!r} at scale {args.scale} (~{est_nodes} nodes) "
+                f"exceeds the {engine.max_dense_gib} GiB dense-shard limit; "
+                f"pass a smaller --scale")
+        ds = make_dataset(g, seed=0, scale=args.scale)
+        datasets[g] = ds
+        engine.register_graph(g, ds)
+        print(f"graph {g}: {ds.profile.num_nodes} nodes, "
+              f"{ds.edges.shape[0]} edges, {ds.profile.feature_dim} features")
+
+    for g in graphs:
+        prof = datasets[g].profile
+        for m in models:
+            engine.register_model(
+                f"{m}@{g}",
+                ZooSpec(m, prof.feature_dim, args.hidden, prof.num_classes,
+                        num_layers=args.layers, heads=args.heads),
+                seed=0)
+
+    rng = np.random.default_rng(1)
+    reqs = []
+    for _ in range(args.num_requests):
+        g = graphs[int(rng.integers(len(graphs)))]
+        m = models[int(rng.integers(len(models)))]
+        n = datasets[g].profile.num_nodes
+        ids = rng.integers(0, n, size=int(rng.integers(1, args.nodes_per_req + 1)))
+        reqs.append(NodeRequest(graph=g, node_ids=ids, model=f"{m}@{g}"))
+
+    t0 = time.time()
+    for r in reqs:
+        engine.submit(r)
+    preds = engine.flush()
+    dt = time.time() - t0
+    for p in preds[:4]:
+        print(f"  {p.model} on {p.graph}: nodes {p.node_ids[:5].tolist()} -> "
+              f"classes {p.classes[:5].tolist()} "
+              f"(p={np.round(p.probs[:5], 3).tolist()})")
+    print(engine.cache_report())
+    print(f"served {len(preds)} requests in {dt:.2f}s "
+          f"({len(preds) / dt:.1f} req/s)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["lm", "gnn"], default="lm")
+    # LM path
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--num-requests", type=int, default=8)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    # GNN path
+    ap.add_argument("--graphs", default="cora")
+    ap.add_argument("--models", default="gcn,gat")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--hidden", type=int, default=16)
+    ap.add_argument("--heads", type=int, default=2)
+    ap.add_argument("--shard-n", type=int, default=512)
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--nodes-per-req", type=int, default=8)
+    args = ap.parse_args()
+
+    if args.mode == "gnn":
+        _serve_gnn(args)
+    else:
+        _serve_lm(args)
 
 
 if __name__ == "__main__":

@@ -1,1 +1,3 @@
 from repro.serving.engine import ServeEngine  # noqa: F401
+from repro.serving.gnn_engine import (GNNServeEngine, NodeRequest,  # noqa: F401
+                                      Prediction)

@@ -69,6 +69,13 @@ print("OK")
 
 @pytest.mark.slow
 def test_gpipe_matches_sequential():
+    import importlib.util
+    import jax.sharding
+    if not hasattr(jax.sharding, "AxisType"):
+        pytest.skip("jax.sharding.AxisType unavailable (jax too old)")
+    if importlib.util.find_spec("repro.dist") is None:
+        # package genuinely absent; a broken existing repro.dist must fail
+        pytest.skip("repro.dist not present in this build")
     out = subprocess.run([sys.executable, "-c", _SCRIPT],
                          capture_output=True, text=True, timeout=900,
                          cwd=".")
