@@ -2,43 +2,33 @@
 three Table-II citation graphs, recorded to BENCH_gnn.json.
 
 Two regimes per graph:
-  * cold  — first request per (model, graph): plans layers, shards the
-            graph, runs full-graph inference (the amortized unit of work).
-  * warm  — steady-state request stream answered from the logits cache
-            (GNNIE's \"accelerator wins become end-user wins\" path).
+  * cold  — first request per (model, graph): compiles the Executable
+            (plan + shard + jit) and runs full-graph inference (the
+            amortized unit of work).
+  * warm  — steady-state request stream answered from the Executable's
+            cached full-graph softmax (GNNIE's \"accelerator wins become
+            end-user wins\" path).
 
-Runs on the ref backend (pure jnp) so the numbers measure the serving
-stack, not Pallas interpret-mode overhead; pubmed is scaled down to keep
-the densified shard grid within CPU memory.
+Runs on the reference backend (pure jnp) so the numbers measure the
+serving stack, not Pallas interpret-mode overhead; pubmed is scaled down
+to keep the densified shard grid within CPU memory.
 """
 from __future__ import annotations
 
-import json
-import os
-import pathlib
 import time
 
 import numpy as np
+
+from benchmarks.report import merge_bench_json
 
 # (name, scale): pubmed's densified (S·n)² grid at full scale is ~1.5 GiB,
 # too big for a CPU smoke benchmark.
 GRAPHS = (("cora", 1.0), ("citeseer", 1.0), ("pubmed", 0.15))
 WARM_REQUESTS = 256
+BACKEND = "reference"
 
 
 def bench_gnn_serve():
-    prior = os.environ.get("REPRO_KERNEL_BACKEND")
-    os.environ.setdefault("REPRO_KERNEL_BACKEND", "ref")
-    try:
-        return _bench_gnn_serve()
-    finally:   # don't leak the backend override into later benchmarks
-        if prior is None:
-            os.environ.pop("REPRO_KERNEL_BACKEND", None)
-        else:
-            os.environ["REPRO_KERNEL_BACKEND"] = prior
-
-
-def _bench_gnn_serve():
     from repro.gnn.models import ZooSpec
     from repro.graphs.datasets import make_dataset
     from repro.serving.gnn_engine import GNNServeEngine, NodeRequest
@@ -47,7 +37,7 @@ def _bench_gnn_serve():
     for name, scale in GRAPHS:
         ds = make_dataset(name, seed=0, scale=scale)
         prof = ds.profile
-        engine = GNNServeEngine(max_shard_n=512)
+        engine = GNNServeEngine(max_shard_n=512, backend=BACKEND)
         engine.register_graph(name, ds)
         engine.register_model("gcn", ZooSpec("gcn", prof.feature_dim, 16,
                                              prof.num_classes, num_layers=2))
@@ -77,11 +67,8 @@ def _bench_gnn_serve():
             "logits_cache_misses": s["logits_cache_misses"],
         })
 
-    out = {"benchmark": "gnn_serve",
-           "backend": os.environ.get("REPRO_KERNEL_BACKEND", "pallas"),
-           "warm_requests": WARM_REQUESTS, "rows": rows}
-    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_gnn.json"
-    path.write_text(json.dumps(out, indent=2) + "\n")
+    merge_bench_json("gnn_serve", {
+        "backend": BACKEND, "warm_requests": WARM_REQUESTS, "rows": rows})
     derived = {"min_warm_rps": min(r["warm_req_per_s"] for r in rows),
-               "recorded": str(path.name)}
+               "recorded": "BENCH_gnn.json"}
     return rows, derived

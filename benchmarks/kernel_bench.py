@@ -1,6 +1,7 @@
-"""Kernel microbenchmarks: wall-time of the Pallas kernels (interpret mode
-on this CPU container — TPU timings come from the roofline terms, not from
-here) vs the pure-jnp oracles, plus the GNN layer pipeline."""
+"""Kernel microbenchmarks: wall-time of every registry backend per op
+(`pallas` runs in interpret mode on this CPU container — TPU timings come
+from the roofline terms, not from here), plus the e2e zoo forward through
+``runtime.compile`` on each backend."""
 from __future__ import annotations
 
 import time
@@ -8,10 +9,9 @@ import time
 import jax
 import numpy as np
 
-from repro.core.engines import GNNeratorController, GraphTensors
-from repro.core.models import build_graph_tensors, init_gnn, make_forward, paper_spec
-from repro.graphs.datasets import make_dataset
-from repro.kernels import ops, ref
+from repro.kernels import registry
+
+BACKENDS = ("pallas", "jax", "reference")
 
 
 def _time(fn, *args, reps: int = 3) -> float:
@@ -27,34 +27,47 @@ def _time(fn, *args, reps: int = 3) -> float:
 def bench_kernels():
     rng = np.random.default_rng(0)
     rows = []
-    # dense engine
+
+    # per-op inputs
     x = rng.standard_normal((512, 512)).astype(np.float32)
     w = rng.standard_normal((512, 256)).astype(np.float32)
-    rows.append({"kernel": "dense_engine_512x512x256",
-                 "pallas_us": round(_time(lambda: ops.dense_matmul(x, w)), 1),
-                 "ref_us": round(_time(lambda: ref.dense_engine(x, w)), 1)})
-    # shard spmm
     s, n, d = 4, 128, 256
     a = (rng.random((s, s, n, n)) < 0.05).astype(np.float32)
     h = rng.standard_normal((s, n, d)).astype(np.float32)
-    rows.append({"kernel": f"shard_spmm_S{s}_n{n}_D{d}",
-                 "pallas_us": round(_time(lambda: ops.graph_aggregate(a, h)), 1),
-                 "ref_us": round(_time(lambda: ref.shard_spmm(a, h)), 1)})
-    # fused layer
     wgt = rng.standard_normal((d, 64)).astype(np.float32)
-    rows.append({"kernel": "fused_gnn_layer",
-                 "pallas_us": round(_time(
-                     lambda: ops.fused_aggregate_extract(a, h, wgt)), 1),
-                 "ref_us": round(_time(lambda: ref.fused_gnn(a, h, wgt)), 1)})
-    # e2e GCN forward on cora
+    es = rng.integers(0, n, (s, s, 300)).astype(np.int32)
+    ed = rng.integers(0, n, (s, s, 300)).astype(np.int32)
+    ev = rng.random((s, s, 300)) < 0.8
+
+    cases = {
+        "dense_matmul_512x512x256":
+            lambda be: be.dense_matmul(x, w),
+        f"graph_aggregate_S{s}_n{n}_D{d}":
+            lambda be: be.graph_aggregate(a, h),
+        "fused_aggregate_extract":
+            lambda be: be.fused_aggregate_extract(a, h, wgt),
+        "gather_aggregate_max":
+            lambda be: be.gather_aggregate(es, ed, ev, h, op="max"),
+    }
+    for kernel, fn in cases.items():
+        row = {"kernel": kernel}
+        for name in BACKENDS:
+            be = registry.get_backend(name)
+            row[f"{name}_us"] = round(_time(fn, be), 1)
+        rows.append(row)
+
+    # e2e GCN forward on cora through the runtime, per backend
+    from repro import runtime
+    from repro.gnn.models import ZooSpec
+    from repro.graphs.datasets import make_dataset
+
     ds = make_dataset("cora")
-    gt = build_graph_tensors(ds.edges, ds.profile.num_nodes, 512, "gcn")
-    spec = paper_spec("gcn", ds.profile.feature_dim, ds.profile.num_classes)
-    params = init_gnn(jax.random.key(0), spec)
-    fwd = make_forward(spec)
-    import jax.numpy as jnp
-    hg = gt.group(jnp.asarray(ds.features))
-    rows.append({"kernel": "gcn_cora_forward_e2e",
-                 "pallas_us": round(_time(lambda: fwd(params, gt, hg), reps=1), 1),
-                 "ref_us": float("nan")})
-    return rows, {"kernels_benchmarked": len(rows)}
+    spec = ZooSpec("gcn", ds.profile.feature_dim, 16,
+                   ds.profile.num_classes, num_layers=2)
+    row = {"kernel": "gcn_cora_forward_e2e"}
+    for name in BACKENDS:
+        exe = runtime.compile(spec, ds, backend=name, max_shard_n=512)
+        row[f"{name}_us"] = round(_time(lambda: exe.forward(), reps=1), 1)
+    rows.append(row)
+    return rows, {"kernels_benchmarked": len(rows),
+                  "backends": list(BACKENDS)}

@@ -13,6 +13,25 @@ import pathlib
 
 from benchmarks.roofline import analyze_record, markdown_table
 
+BENCH_GNN_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_gnn.json"
+
+
+def merge_bench_json(section: str, payload: dict,
+                     path: pathlib.Path = BENCH_GNN_PATH) -> None:
+    """Read-modify-write one named section of BENCH_gnn.json so the GNN
+    benchmarks (gnn_serve, runtime_compile, ...) can each record results
+    without clobbering the others."""
+    doc = {}
+    if path.exists():
+        try:
+            doc = json.loads(path.read_text())
+        except ValueError:
+            doc = {}
+    if "benchmark" in doc:       # pre-PR-2 single-benchmark layout
+        doc = {doc.pop("benchmark", "gnn_serve"): doc}
+    doc[section] = payload
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+
 
 def dryrun_table(dry_dir: str, mesh: str) -> str:
     rows = []

@@ -29,6 +29,7 @@ def main() -> None:
     from benchmarks.paper_tables import (bench_fig3, bench_fig4, bench_fig5,
                                          bench_table1, bench_table5)
     from benchmarks.roofline import bench_roofline, markdown_table
+    from benchmarks.runtime_compile import bench_runtime_compile
 
     print("name,us_per_call,derived")
     all_rows = {}
@@ -39,6 +40,8 @@ def main() -> None:
     all_rows["fig5_scaling"] = _run("fig5_scaling", bench_fig5)
     all_rows["kernels"] = _run("kernels_microbench", bench_kernels)
     all_rows["gnn_serve"] = _run("gnn_serve", bench_gnn_serve)
+    all_rows["runtime_compile"] = _run("runtime_compile",
+                                       bench_runtime_compile)
     all_rows["roofline"] = _run("roofline", bench_roofline)
 
     print("\n=== detailed tables ===", file=sys.stderr)

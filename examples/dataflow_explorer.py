@@ -1,5 +1,6 @@
 """Dataflow explorer: the paper's Algorithm-1 schedule, Table-I costs and
-the platform model, interactively.
+the platform model, interactively — ending with what ``runtime.compile``
+actually picks for a zoo model on this graph.
 
     PYTHONPATH=src python examples/dataflow_explorer.py --dataset pubmed \
         --block 64 --budget-mb 24
@@ -7,11 +8,13 @@ the platform model, interactively.
 import argparse
 import sys
 
+from repro import runtime
 from repro.core.dataflow import (Dataflow, best_order, blocked_vs_conventional,
                                  simulate_traffic, table1_costs)
 from repro.core.perf_model import (GNNERATOR, GNNERATOR_NOBLOCK, GPU_2080TI,
                                    HYGCN, model_time)
 from repro.core.sharding import max_shard_nodes_for_budget, shard_graph
+from repro.gnn.models import ZooSpec
 from repro.graphs.datasets import make_dataset
 
 
@@ -54,6 +57,16 @@ def main() -> None:
     for p in (GPU_2080TI, HYGCN, GNNERATOR_NOBLOCK, GNNERATOR):
         t = model_time(p, "gcn", args.dataset, block_b=args.block)
         print(f"  {p.name:18s}: {t * 1e3:8.3f} ms")
+
+    # what the runtime's compile step actually schedules for this graph
+    # (quarter-scale copy: compiling densifies shard blocks on device, and
+    # the explorer only needs to show the plan, not pay full-graph memory)
+    demo = make_dataset(args.dataset, scale=0.25)
+    spec = ZooSpec("gcn", demo.profile.feature_dim, 16,
+                   demo.profile.num_classes, num_layers=2)
+    exe = runtime.compile(spec, demo, backend="reference")
+    print("\nruntime.compile plan (2-layer GCN, scale=0.25):")
+    print(exe.summary())
     return 0
 
 

@@ -1,8 +1,13 @@
-"""Quickstart: train the paper's GCN on (synthetic) Cora with the
-GNNerator engines — dimension-blocked shard aggregation on the Graph
-Engine, fused feature extraction on the Dense Engine.
+"""Quickstart: train a zoo GNN on (synthetic) Cora through the runtime.
 
-    PYTHONPATH=src python examples/quickstart.py [--epochs 30]
+One ``runtime.compile()`` call plans the layer execution (feature-block
+size B, shard grid, traversal order, fused vs two-stage), shards the graph
+for the architecture's normalization signature, and jits the forward on
+the chosen kernel backend; ``Executable.forward(params)`` is
+differentiable, so the same entry point drives training.
+
+    PYTHONPATH=src python examples/quickstart.py [--epochs 30] \
+        [--backend reference]
 """
 import argparse
 import sys
@@ -11,41 +16,48 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.models import (build_graph_tensors, init_gnn, make_forward,
-                               paper_spec)
+from repro import runtime
+from repro.gnn.models import ZooSpec
 from repro.graphs.datasets import make_dataset
 from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
 
+# paper Table-III names -> zoo architectures
+NETWORKS = {"gcn": "gcn", "graphsage": "sage_mean",
+            "graphsage_pool": "sage_max"}
 
-def main() -> None:
+
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="cora",
                     choices=["cora", "citeseer", "pubmed"])
-    ap.add_argument("--network", default="gcn",
-                    choices=["gcn", "graphsage", "graphsage_pool"])
+    ap.add_argument("--network", default="gcn", choices=sorted(NETWORKS))
     ap.add_argument("--epochs", type=int, default=30)
+    ap.add_argument("--hidden", type=int, default=16)
     ap.add_argument("--shard-n", type=int, default=512,
-                    help="nodes per shard (the paper's n)")
+                    help="planner cap on nodes per shard (the paper's n)")
+    ap.add_argument("--backend", default=None,
+                    choices=["pallas", "jax", "reference", "ref"],
+                    help="kernel backend (default: REPRO_KERNEL_BACKEND "
+                         "env, else pallas — interpret mode on CPU)")
     args = ap.parse_args()
 
     ds = make_dataset(args.dataset)
     print(f"{ds.profile.name}: {ds.profile.num_nodes} nodes, "
           f"{ds.edges.shape[0]} edges, {ds.profile.feature_dim} features "
           f"({ds.size_mb:.1f} MB)")
-    gt = build_graph_tensors(ds.edges, ds.profile.num_nodes, args.shard_n,
-                             args.network)
-    print(f"shard grid: {gt.S}x{gt.S} (n={gt.n})")
 
-    spec = paper_spec(args.network, ds.profile.feature_dim,
-                      ds.profile.num_classes)
-    params = init_gnn(jax.random.key(0), spec)
-    fwd = make_forward(spec)
-    feats = gt.group(jnp.asarray(ds.features))
+    spec = ZooSpec(NETWORKS[args.network], ds.profile.feature_dim,
+                   args.hidden, ds.profile.num_classes, num_layers=2)
+    exe = runtime.compile(spec, ds, backend=args.backend,
+                          max_shard_n=args.shard_n)
+    print(exe.summary())
+
+    params = exe.params
     labels = jnp.asarray(ds.labels)
     mask = jnp.asarray(ds.train_mask)
 
     def loss_fn(p):
-        logits = fwd(p, gt, feats)
+        logits = exe.forward(p)
         logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
         nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
         return jnp.sum(nll * mask) / jnp.sum(mask), logits
@@ -61,6 +73,7 @@ def main() -> None:
         acc = float(jnp.mean((jnp.argmax(logits, -1) == labels)[~ds.train_mask]))
         print(f"epoch {epoch:3d} loss {float(loss):.4f} "
               f"test-acc {acc:.3f} ({time.time() - t0:.2f}s)")
+    exe.set_params(params)   # trained weights now serve from the Executable
     print("done.")
     return 0
 

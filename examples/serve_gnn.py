@@ -1,15 +1,18 @@
 """Serve GNN node-classification requests end-to-end.
 
 Runs a 2-layer GCN and a 2-layer GAT from the repro.gnn model zoo through
-serving/gnn_engine.py on the synthetic Cora profile: the executor plans
-(S, B, order, fused) per layer from the Table-I cost model, the engine
-shards + caches the graph once per normalization signature, and batches of
-node-id requests come back as class predictions with cache-hit stats.
+serving/gnn_engine.py on the synthetic Cora profile. Each (model, graph)
+pair is compiled once via ``repro.runtime`` — the planner picks
+(S, B, order, fused) per layer from the Table-I cost model, the runtime
+GraphStore shards + caches the graph once per normalization signature —
+and batches of node-id requests come back as class predictions with
+cache-hit stats.
 
-    PYTHONPATH=src python examples/serve_gnn.py [--scale 1.0]
+    PYTHONPATH=src python examples/serve_gnn.py [--scale 1.0] [--requests 32]
 
 (The default Pallas kernels run in interpret mode on CPU, which is slow at
-full Cora scale — pass --backend ref or a smaller --scale for a quick run.)
+full Cora scale — pass --backend reference or a smaller --scale for a
+quick run.)
 """
 import argparse
 import os
@@ -25,16 +28,16 @@ def main() -> int:
                     choices=["cora", "citeseer", "pubmed"])
     ap.add_argument("--scale", type=float, default=0.25,
                     help="graph scale factor (1.0 = full Table-II profile)")
-    ap.add_argument("--backend", default=None, choices=["pallas", "ref"],
+    ap.add_argument("--backend", default=None,
+                    choices=["pallas", "jax", "reference", "ref"],
                     help="kernel backend (default: REPRO_KERNEL_BACKEND "
-                         "env var, else ref — fast pure-jnp on CPU)")
-    ap.add_argument("--num-requests", type=int, default=32)
+                         "env var, else reference — fast pure-jnp on CPU)")
+    ap.add_argument("--requests", "--num-requests", dest="requests",
+                    type=int, default=32)
     ap.add_argument("--hidden", type=int, default=16)
     args = ap.parse_args()
-    if args.backend:                      # an explicit flag beats the env
-        os.environ["REPRO_KERNEL_BACKEND"] = args.backend
-    else:
-        os.environ.setdefault("REPRO_KERNEL_BACKEND", "ref")
+    backend = (args.backend or os.environ.get("REPRO_KERNEL_BACKEND")
+               or "reference")
 
     from repro.gnn.models import ZooSpec
     from repro.graphs.datasets import make_dataset
@@ -45,7 +48,7 @@ def main() -> int:
     print(f"{prof.name}: {prof.num_nodes} nodes, {ds.edges.shape[0]} edges, "
           f"{prof.feature_dim} features, {prof.num_classes} classes")
 
-    engine = GNNServeEngine(max_shard_n=512)
+    engine = GNNServeEngine(max_shard_n=512, backend=backend)
     engine.register_graph(args.dataset, ds)
     engine.register_model("gcn-2l", ZooSpec("gcn", prof.feature_dim,
                                             args.hidden, prof.num_classes,
@@ -54,12 +57,12 @@ def main() -> int:
                                             args.hidden, prof.num_classes,
                                             num_layers=2, heads=2))
 
-    # show what the executor decided for each model
+    # show what each (model, graph) pair compiled to
     for name in ("gcn-2l", "gat-2l"):
-        print("\n" + engine.model_plan(name, args.dataset).summary())
+        print("\n" + engine.executable(name, args.dataset).summary())
 
     rng = np.random.default_rng(7)
-    for i in range(args.num_requests):
+    for i in range(args.requests):
         ids = rng.integers(0, prof.num_nodes,
                            size=int(rng.integers(1, 9)))
         engine.submit(NodeRequest(args.dataset, ids,

@@ -1,2 +1,4 @@
 from repro.configs.registry import (ARCHS, SHAPES, get_config, get_smoke,
-                                    shape_applicable)  # noqa: F401
+                                    shape_applicable)
+
+__all__ = ["ARCHS", "SHAPES", "get_config", "get_smoke", "shape_applicable"]

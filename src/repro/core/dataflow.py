@@ -212,8 +212,10 @@ def blocked_vs_conventional(
     # per-block cost × number of blocks, in node-feature-block units that we
     # convert to bytes for a fair comparison
     conv_bytes = (costs_conv["read"] + costs_conv["write"]) * n_conv * D * dtype_bytes
+    # the last (partial) feature block still costs a full grid sweep, so the
+    # block count is ceil(D/B) — flooring undercounts traffic when B ∤ D
     blk_bytes = (
-        (costs_blk["read"] + costs_blk["write"]) * n_blk * B * dtype_bytes * (D // max(B, 1))
+        (costs_blk["read"] + costs_blk["write"]) * n_blk * B * dtype_bytes * cdiv(D, max(B, 1))
     )
     return {
         "n_conventional": n_conv,

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sharding import ShardedGraph
-from repro.kernels import ops
+from repro.kernels.registry import KernelBackend, resolve
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,15 +60,20 @@ class GraphTensors:
 
 @dataclasses.dataclass(frozen=True)
 class DenseEngine:
-    """Feature extraction: blocked systolic matmul + activation unit."""
+    """Feature extraction: blocked systolic matmul + activation unit.
+
+    ``backend`` pins a :class:`~repro.kernels.registry.KernelBackend`;
+    None resolves per call from the registry (env-var selectable)."""
 
     bm: int = 128
     bn: int = 128
     bk: int = 128
+    backend: KernelBackend | None = None
 
     def __call__(self, x, w, b=None, *, activation: str = "none"):
-        return ops.dense_matmul(x, w, b, activation=activation,
-                                bm=self.bm, bn=self.bn, bk=self.bk)
+        be = self.backend or resolve("dense_matmul")
+        return be.dense_matmul(x, w, b, activation=activation,
+                               bm=self.bm, bn=self.bn, bk=self.bk)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,15 +81,24 @@ class GraphEngine:
     """Aggregation over the shard grid with dimension-blocking."""
 
     block_b: int = 128   # the paper's B (feature block size)
+    backend: KernelBackend | None = None
 
     def aggregate(self, gt: GraphTensors, h: jax.Array, *,
                   op: Literal["linear", "max", "sum"] = "linear") -> jax.Array:
         """h: (S, n, D) shard-grouped. Linear = weights baked into blocks
         (sum/mean/gcn); max/sum go through the edge-list gather kernel."""
         if op == "linear":
-            return ops.graph_aggregate(gt.blocks, h, block_b=self.block_b)
-        return ops.gather_aggregate(gt.edge_src, gt.edge_dst, gt.edge_valid,
-                                    h, op=op, block_b=self.block_b)
+            return self.spmm(gt.blocks, h)
+        be = self.backend or resolve("gather_aggregate")
+        return be.gather_aggregate(gt.edge_src, gt.edge_dst, gt.edge_valid,
+                                   h, op=op, block_b=self.block_b)
+
+    def spmm(self, blocks: jax.Array, h: jax.Array) -> jax.Array:
+        """Shard-grid SpMM on explicit (S, S, n, n) blocks — used directly
+        by attention-weighted aggregation (GAT), where the weights are not
+        baked into the cached GraphTensors."""
+        be = self.backend or resolve("graph_aggregate")
+        return be.graph_aggregate(blocks, h, block_b=self.block_b)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,7 +117,8 @@ class GNNeratorController:
                     b=None, *, activation: str = "none") -> jax.Array:
         """act((A · H) · W) — GCN-style layer body on grouped features."""
         if self.fuse and b is None:
-            return ops.fused_aggregate_extract(
+            be = self.graph.backend or resolve("fused_aggregate_extract")
+            return be.fused_aggregate_extract(
                 gt.blocks, h, w, activation=activation,
                 block_b=self.graph.block_b)
         agg = self.graph.aggregate(gt, h, op="linear")

@@ -1,11 +1,20 @@
-"""End-to-end GNN model zoo + layer execution planning (``repro.gnn``).
+"""GNN model zoo specs + layer execution planning (``repro.gnn``).
 
-``models``   — multi-layer GCN / GraphSAGE(mean,max) / GIN / GAT assembled
-               from the Dense/Graph engine primitives (core/engines.py) and
-               Pallas kernels (kernels/ops.py).
+``models``   — ZooSpec / init for multi-layer GCN / GraphSAGE(mean,max) /
+               GIN / GAT (forward execution lives in ``repro.runtime``;
+               ``zoo_forward``/``build_zoo_graph`` remain as deprecation
+               shims).
 ``executor`` — per-layer (S, B, order, fused?) planning via the Table-I
-               cost model in core/dataflow.py + core/perf_model.py.
+               cost model in core/dataflow.py + core/perf_model.py,
+               content-hash memoized with JSON round-tripping.
 """
-from repro.gnn.executor import LayerPlan, ModelPlan, plan_model  # noqa: F401
-from repro.gnn.models import (ARCHS, ZooSpec, build_zoo_graph,  # noqa: F401
+from repro.gnn.executor import (LayerPlan, ModelPlan, clear_plan_cache,
+                                plan_cache_stats, plan_model)
+from repro.gnn.models import (ARCHS, ZooSpec, build_zoo_graph,
                               graph_signature, init_zoo, zoo_forward)
+
+__all__ = [
+    "LayerPlan", "ModelPlan", "clear_plan_cache", "plan_cache_stats",
+    "plan_model", "ARCHS", "ZooSpec", "build_zoo_graph", "graph_signature",
+    "init_zoo", "zoo_forward",
+]

@@ -1,3 +1,5 @@
-from repro.graphs.datasets import (DATASETS, LARGE_DATASETS,  # noqa: F401
-                                   TABLE2_DATASETS, GraphData, load,
-                                   make_dataset)
+from repro.graphs.datasets import (DATASETS, LARGE_DATASETS, TABLE2_DATASETS,
+                                   GraphData, load, make_dataset)
+
+__all__ = ["DATASETS", "LARGE_DATASETS", "TABLE2_DATASETS", "GraphData",
+           "load", "make_dataset"]

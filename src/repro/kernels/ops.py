@@ -1,199 +1,55 @@
-"""Public, shape-safe entry points for the Pallas kernels.
+"""Public, shape-safe entry points for the kernel ops.
 
-Each op pads its inputs to the kernel's block multiples, dispatches to the
-Pallas kernel (interpret mode on CPU; compiled on TPU) or to the pure-jnp
-oracle in ref.py, and slices the result back. Backend selection:
+Each function dispatches through the kernel-backend registry
+(:mod:`repro.kernels.registry`): ``pallas`` (default; interpret mode on
+CPU, compiled on TPU), ``jax`` (pure-XLA lowering) or ``reference`` (the
+pure-jnp oracles). Selection, most specific wins:
 
-    REPRO_KERNEL_BACKEND=pallas   (default) Pallas kernels, interpret on CPU
-    REPRO_KERNEL_BACKEND=ref      pure-jnp oracles (fast on CPU; used by the
-                                  distributed/pjit paths where a per-device
-                                  interpret loop would be pointless)
+    ops.dense_matmul(..., backend="jax")        per call
+    REPRO_KERNEL_BACKEND_DENSE_MATMUL=jax       per op (env)
+    REPRO_KERNEL_BACKEND=reference              global (env; "ref" is a
+                                                legacy alias)
+
+This module is a compatibility façade — new code should resolve a backend
+once (``registry.resolve`` / ``runtime.compile(..., backend=...)``) and
+call its methods directly.
 """
 from __future__ import annotations
 
-import os
-
-import jax
-import jax.numpy as jnp
-
-from repro.kernels import dense_engine as _de
-from repro.kernels import flash_attention as _fa
-from repro.kernels import fused_gnn as _fg
-from repro.kernels import ref
-from repro.kernels import seg_gather as _sg
-from repro.kernels import shard_spmm as _ss
-from repro.utils import round_up
-
-
-def _backend() -> str:
-    return os.environ.get("REPRO_KERNEL_BACKEND", "pallas")
-
-
-def _with_ref_vjp(kernel_fn, ref_fn):
-    """custom_vjp wrapper: FORWARD runs the Pallas kernel, BACKWARD
-    differentiates the pure-jnp oracle (recomputing the forward pass —
-    kernels in interpret mode are not ad-traceable, and shipping explicit
-    VJPs per kernel is exactly what production kernel libraries do; the
-    oracle-derived gradient is validated in tests/test_kernels_grad.py)."""
-    @jax.custom_vjp
-    def f(*args):
-        return kernel_fn(*args)
-
-    def fwd(*args):
-        return kernel_fn(*args), args
-
-    def bwd(args, g):
-        _, vjp = jax.vjp(ref_fn, *args)
-        return vjp(g)
-
-    f.defvjp(fwd, bwd)
-    return f
-
-
-def _interpret() -> bool:
-    # interpret unless we are actually on TPU
-    return jax.default_backend() != "tpu"
-
-
-def _pad(x, size, axis):
-    pad = size - x.shape[axis]
-    if pad <= 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+from repro.kernels import registry
 
 
 def dense_matmul(x, w, b=None, *, activation: str = "none",
-                 bm: int = 128, bn: int = 128, bk: int = 128):
+                 bm: int = 128, bn: int = 128, bk: int = 128, backend=None):
     """act(x @ w + b); x (M, K), w (K, N)."""
-    if _backend() == "ref":
-        return ref.dense_engine(x, w, b, activation=activation)
-
-    def kernel(x, w, *opt_b):
-        m, k = x.shape
-        n = w.shape[1]
-        bm_, bn_, bk_ = (min(bm, round_up(m, 8)), min(bn, round_up(n, 8)),
-                         min(bk, round_up(k, 8)))
-        mp, kp, np_ = round_up(m, bm_), round_up(k, bk_), round_up(n, bn_)
-        xp = _pad(_pad(x, mp, 0), kp, 1)
-        wp = _pad(_pad(w, kp, 0), np_, 1)
-        bp = _pad(opt_b[0], np_, 0) if opt_b else None
-        out = _de.dense_engine_matmul(
-            xp, wp, bp, activation=activation, bm=bm_, bn=bn_, bk=bk_,
-            interpret=_interpret())
-        return out[:m, :n]
-
-    def ref_fn(x, w, *opt_b):
-        return ref.dense_engine(x, w, opt_b[0] if opt_b else None,
-                                activation=activation)
-
-    args = (x, w) if b is None else (x, w, b)
-    return _with_ref_vjp(kernel, ref_fn)(*args)
+    return registry.resolve("dense_matmul", backend).dense_matmul(
+        x, w, b, activation=activation, bm=bm, bn=bn, bk=bk)
 
 
-def graph_aggregate(blocks, h, *, block_b: int = 128):
+def graph_aggregate(blocks, h, *, block_b: int = 128, backend=None):
     """Linear shard-grid aggregation: out[i] = Σ_j A[i,j] @ h[j]."""
-    if _backend() == "ref":
-        return ref.shard_spmm(blocks, h)
-
-    def kernel(blocks, h):
-        d = h.shape[-1]
-        bb = min(block_b, round_up(d, 8))
-        dp = round_up(d, bb)
-        out = _ss.shard_spmm(blocks, _pad(h, dp, 2), block_b=bb,
-                             interpret=_interpret())
-        return out[..., :d]
-
-    return _with_ref_vjp(kernel, ref.shard_spmm)(blocks, h)
+    return registry.resolve("graph_aggregate", backend).graph_aggregate(
+        blocks, h, block_b=block_b)
 
 
 def fused_aggregate_extract(blocks, h, w, *, activation: str = "none",
-                            block_b: int = 128):
+                            block_b: int = 128, backend=None):
     """act((A·H)·W) with h_agg kept in VMEM (inter-stage fusion)."""
-    if _backend() == "ref":
-        return ref.fused_gnn(blocks, h, w, activation=activation)
-
-    def kernel(blocks, h, w):
-        d = h.shape[-1]
-        bb = min(block_b, round_up(d, 8))
-        dp = round_up(d, bb)
-        return _fg.fused_gnn_layer(
-            blocks, _pad(h, dp, 2), _pad(w, dp, 0),
-            block_b=bb, activation=activation, interpret=_interpret())
-
-    def ref_fn(blocks, h, w):
-        return ref.fused_gnn(blocks, h, w, activation=activation)
-
-    return _with_ref_vjp(kernel, ref_fn)(blocks, h, w)
+    return registry.resolve(
+        "fused_aggregate_extract", backend).fused_aggregate_extract(
+        blocks, h, w, activation=activation, block_b=block_b)
 
 
 def gather_aggregate(edge_src, edge_dst, edge_valid, h, *, op: str = "max",
-                     block_b: int = 128):
+                     block_b: int = 128, backend=None):
     """Edge-list (gather/scatter) aggregation; supports max/sum."""
-    if _backend() == "ref":
-        s, n, d = h.shape
-        outs = []
-        for i in range(s):
-            acc = None
-            for j in range(s):
-                part = ref.seg_gather_agg(
-                    edge_src[i, j], edge_dst[i, j], edge_valid[i, j],
-                    h[j], n, op=op, keep_identity=(op == "max"))
-                acc = part if acc is None else (
-                    jnp.maximum(acc, part) if op == "max" else acc + part)
-            if op == "max":
-                acc = jnp.where(jnp.isfinite(acc), acc, 0.0).astype(h.dtype)
-            outs.append(acc)
-        return jnp.stack(outs)
-    def kernel(h):
-        d = h.shape[-1]
-        bb = min(block_b, round_up(d, 8))
-        dp = round_up(d, bb)
-        out = _sg.seg_gather_aggregate(
-            edge_src, edge_dst, edge_valid, _pad(h, dp, 2), op=op,
-            block_b=bb, interpret=_interpret())
-        return out[..., :d]
-
-    def ref_fn(h):
-        s, n, d = h.shape
-        outs = []
-        for i in range(s):
-            acc = None
-            for j in range(s):
-                part = ref.seg_gather_agg(
-                    edge_src[i, j], edge_dst[i, j], edge_valid[i, j],
-                    h[j], n, op=op, keep_identity=(op == "max"))
-                acc = part if acc is None else (
-                    jnp.maximum(acc, part) if op == "max" else acc + part)
-            if op == "max":
-                acc = jnp.where(jnp.isfinite(acc), acc, 0.0).astype(h.dtype)
-            outs.append(acc)
-        return jnp.stack(outs)
-
-    return _with_ref_vjp(kernel, ref_fn)(h)
+    return registry.resolve("gather_aggregate", backend).gather_aggregate(
+        edge_src, edge_dst, edge_valid, h, op=op, block_b=block_b)
 
 
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,
-              scale: float | None = None, bq: int = 128, bk: int = 128):
+              scale: float | None = None, bq: int = 128, bk: int = 128,
+              backend=None):
     """Flash attention; q (B,Hq,Sq,Dh), k/v (B,Hkv,Skv,Dh)."""
-    sq, skv = q.shape[2], k.shape[2]
-    bq_, bk_ = min(bq, sq), min(bk, skv)
-    if _backend() == "ref" or sq % bq_ or skv % bk_:
-        # Padding the sequence axes would shift the causal-offset alignment
-        # (qpos = skv - sq + i); rather than re-deriving masks for padded
-        # layouts we require block-multiple shapes for the kernel path and
-        # fall back to the oracle otherwise.
-        return ref.flash_attention(q, k, v, causal=causal, scale=scale,
-                                   window=window)
-
-    def kernel(q, k, v):
-        return _fa.flash_attention(q, k, v, causal=causal, window=window,
-                                   scale=scale, bq=bq_, bk=bk_,
-                                   interpret=_interpret())
-
-    def ref_fn(q, k, v):
-        return ref.flash_attention(q, k, v, causal=causal, scale=scale,
-                                   window=window)
-
-    return _with_ref_vjp(kernel, ref_fn)(q, k, v)
+    return registry.resolve("attention", backend).attention(
+        q, k, v, causal=causal, window=window, scale=scale, bq=bq, bk=bk)

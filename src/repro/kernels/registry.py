@@ -1,0 +1,383 @@
+"""Pluggable kernel-backend registry (the runtime's hardware abstraction).
+
+Every compute primitive the engines need is one method on the
+:class:`KernelBackend` protocol. Three backends ship in-tree:
+
+  pallas      the Pallas kernels (interpret mode on CPU, compiled on TPU),
+              shape-safe padding at the boundary, backward pass derived
+              from the pure-jnp oracles via ``custom_vjp``.
+  jax         pure-XLA lowering: fully vectorized ``jnp`` implementations
+              (vmapped segment ops instead of per-shard Python loops) that
+              XLA fuses on any device. Ad-traceable end to end.
+  reference   the semantic ground truth from :mod:`repro.kernels.ref` —
+              written for clarity (explicit per-shard-pair loops), used as
+              the oracle everything else is pinned against.
+
+Selection precedence, most specific wins:
+
+  1. an explicit backend passed per call / per ``runtime.compile(...)``,
+  2. a per-op override in ``REPRO_KERNEL_BACKEND_<OP>`` (op upper-cased),
+  3. the global ``REPRO_KERNEL_BACKEND`` env var,
+  4. the default, ``pallas``.
+
+``ref`` is accepted everywhere as a legacy alias for ``reference``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dense_engine as _de
+from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_gnn as _fg
+from repro.kernels import ref
+from repro.kernels import seg_gather as _sg
+from repro.kernels import shard_spmm as _ss
+from repro.utils import round_up
+
+DEFAULT_BACKEND = "pallas"
+
+# the ops every backend must provide (= the registry's per-op override keys)
+OP_NAMES = ("dense_matmul", "graph_aggregate", "fused_aggregate_extract",
+            "gather_aggregate", "attention")
+
+
+@runtime_checkable
+class KernelBackend(Protocol):
+    """One implementation of every engine compute primitive."""
+
+    name: str
+
+    def dense_matmul(self, x, w, b=None, *, activation: str = "none",
+                     bm: int = 128, bn: int = 128, bk: int = 128):
+        """act(x @ w + b); x (M, K), w (K, N), b (N,) or None."""
+        ...
+
+    def graph_aggregate(self, blocks, h, *, block_b: int = 128):
+        """Linear shard-grid aggregation: out[i] = Σ_j A[i,j] @ h[j]."""
+        ...
+
+    def fused_aggregate_extract(self, blocks, h, w, *,
+                                activation: str = "none", block_b: int = 128):
+        """act((A·H)·W) with h_agg never leaving on-chip memory."""
+        ...
+
+    def gather_aggregate(self, edge_src, edge_dst, edge_valid, h, *,
+                         op: str = "max", block_b: int = 128):
+        """Edge-list (gather/scatter) aggregation; supports max/sum."""
+        ...
+
+    def attention(self, q, k, v, *, causal: bool = True,
+                  window: int | None = None, scale: float | None = None,
+                  bq: int = 128, bk: int = 128):
+        """Attention; q (B,Hq,Sq,Dh), k/v (B,Hkv,Skv,Dh)."""
+        ...
+
+
+# --------------------------------------------------------------------------
+# shared helpers
+# --------------------------------------------------------------------------
+
+def _with_ref_vjp(kernel_fn, ref_fn):
+    """custom_vjp wrapper: FORWARD runs the Pallas kernel, BACKWARD
+    differentiates the pure-jnp oracle (recomputing the forward pass —
+    kernels in interpret mode are not ad-traceable, and shipping explicit
+    VJPs per kernel is exactly what production kernel libraries do; the
+    oracle-derived gradient is validated in tests/test_kernels_grad.py)."""
+    @jax.custom_vjp
+    def f(*args):
+        return kernel_fn(*args)
+
+    def fwd(*args):
+        return kernel_fn(*args), args
+
+    def bwd(args, g):
+        _, vjp = jax.vjp(ref_fn, *args)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _interpret() -> bool:
+    # interpret unless we are actually on TPU
+    return jax.default_backend() != "tpu"
+
+
+def _pad(x, size, axis):
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _gather_loop(edge_src, edge_dst, edge_valid, h, *, op: str):
+    """Per-shard-pair Python loop over the grid (the readable reference)."""
+    s, n, _ = h.shape
+    outs = []
+    for i in range(s):
+        acc = None
+        for j in range(s):
+            part = ref.seg_gather_agg(
+                edge_src[i, j], edge_dst[i, j], edge_valid[i, j],
+                h[j], n, op=op, keep_identity=(op == "max"))
+            acc = part if acc is None else (
+                jnp.maximum(acc, part) if op == "max" else acc + part)
+        if op == "max":
+            acc = jnp.where(jnp.isfinite(acc), acc, 0.0).astype(h.dtype)
+        outs.append(acc)
+    return jnp.stack(outs)
+
+
+# --------------------------------------------------------------------------
+# reference backend: the oracles, verbatim
+# --------------------------------------------------------------------------
+
+class ReferenceBackend:
+    """Semantic ground truth (kernels/ref.py); clarity over speed."""
+
+    name = "reference"
+
+    def dense_matmul(self, x, w, b=None, *, activation="none",
+                     bm=128, bn=128, bk=128):
+        return ref.dense_engine(x, w, b, activation=activation)
+
+    def graph_aggregate(self, blocks, h, *, block_b=128):
+        return ref.shard_spmm(blocks, h)
+
+    def fused_aggregate_extract(self, blocks, h, w, *, activation="none",
+                                block_b=128):
+        return ref.fused_gnn(blocks, h, w, activation=activation)
+
+    def gather_aggregate(self, edge_src, edge_dst, edge_valid, h, *,
+                         op="max", block_b=128):
+        return _gather_loop(edge_src, edge_dst, edge_valid, h, op=op)
+
+    def attention(self, q, k, v, *, causal=True, window=None, scale=None,
+                  bq=128, bk=128):
+        return ref.flash_attention(q, k, v, causal=causal, scale=scale,
+                                   window=window)
+
+
+# --------------------------------------------------------------------------
+# jax backend: pure-XLA lowering, fully vectorized
+# --------------------------------------------------------------------------
+
+class JaxBackend(ReferenceBackend):
+    """Pure-XLA lowering. The dense/spmm/fused/attention oracles are
+    already single fused einsums, so those are shared with ``reference``;
+    the one op where reference trades speed for readability — the
+    per-shard-pair Python gather loop — is replaced by a vmapped segment
+    aggregation that scales to large shard grids on CPU/GPU/TPU without
+    Pallas."""
+
+    name = "jax"
+
+    def gather_aggregate(self, edge_src, edge_dst, edge_valid, h, *,
+                         op="max", block_b=128):
+        s, n, _ = h.shape
+
+        def one_pair(es, ed, ev, h_src):
+            return ref.seg_gather_agg(es, ed, ev, h_src, n, op=op,
+                                      keep_identity=(op == "max"))
+
+        def one_dst(es_row, ed_row, ev_row):
+            # (S, E) edge rows against all S source shards at once
+            parts = jax.vmap(one_pair)(es_row, ed_row, ev_row, h)
+            if op == "max":
+                acc = jnp.max(parts, axis=0)
+                return jnp.where(jnp.isfinite(acc), acc, 0.0).astype(h.dtype)
+            return jnp.sum(parts, axis=0).astype(h.dtype)
+
+        return jax.vmap(one_dst)(edge_src, edge_dst, edge_valid)
+
+    def attention(self, q, k, v, *, causal=True, window=None, scale=None,
+                  bq=128, bk=128):
+        return ref.flash_attention(q, k, v, causal=causal, scale=scale,
+                                   window=window)
+
+
+# --------------------------------------------------------------------------
+# pallas backend: the kernels, padded at the boundary, oracle-derived VJPs
+# --------------------------------------------------------------------------
+
+class PallasBackend:
+    """The Pallas kernels (interpret mode off-TPU). Inputs are padded to
+    the kernels' block multiples and sliced back; backward passes come
+    from the oracles via custom_vjp."""
+
+    name = "pallas"
+
+    def dense_matmul(self, x, w, b=None, *, activation="none",
+                     bm=128, bn=128, bk=128):
+        def kernel(x, w, *opt_b):
+            m, k = x.shape
+            n = w.shape[1]
+            bm_, bn_, bk_ = (min(bm, round_up(m, 8)), min(bn, round_up(n, 8)),
+                             min(bk, round_up(k, 8)))
+            mp, kp, np_ = round_up(m, bm_), round_up(k, bk_), round_up(n, bn_)
+            xp = _pad(_pad(x, mp, 0), kp, 1)
+            wp = _pad(_pad(w, kp, 0), np_, 1)
+            bp = _pad(opt_b[0], np_, 0) if opt_b else None
+            out = _de.dense_engine_matmul(
+                xp, wp, bp, activation=activation, bm=bm_, bn=bn_, bk=bk_,
+                interpret=_interpret())
+            return out[:m, :n]
+
+        def ref_fn(x, w, *opt_b):
+            return ref.dense_engine(x, w, opt_b[0] if opt_b else None,
+                                    activation=activation)
+
+        args = (x, w) if b is None else (x, w, b)
+        return _with_ref_vjp(kernel, ref_fn)(*args)
+
+    def graph_aggregate(self, blocks, h, *, block_b=128):
+        def kernel(blocks, h):
+            d = h.shape[-1]
+            bb = min(block_b, round_up(d, 8))
+            dp = round_up(d, bb)
+            out = _ss.shard_spmm(blocks, _pad(h, dp, 2), block_b=bb,
+                                 interpret=_interpret())
+            return out[..., :d]
+
+        return _with_ref_vjp(kernel, ref.shard_spmm)(blocks, h)
+
+    def fused_aggregate_extract(self, blocks, h, w, *, activation="none",
+                                block_b=128):
+        def kernel(blocks, h, w):
+            d = h.shape[-1]
+            bb = min(block_b, round_up(d, 8))
+            dp = round_up(d, bb)
+            return _fg.fused_gnn_layer(
+                blocks, _pad(h, dp, 2), _pad(w, dp, 0),
+                block_b=bb, activation=activation, interpret=_interpret())
+
+        def ref_fn(blocks, h, w):
+            return ref.fused_gnn(blocks, h, w, activation=activation)
+
+        return _with_ref_vjp(kernel, ref_fn)(blocks, h, w)
+
+    def gather_aggregate(self, edge_src, edge_dst, edge_valid, h, *,
+                         op="max", block_b=128):
+        def kernel(h):
+            d = h.shape[-1]
+            bb = min(block_b, round_up(d, 8))
+            dp = round_up(d, bb)
+            out = _sg.seg_gather_aggregate(
+                edge_src, edge_dst, edge_valid, _pad(h, dp, 2), op=op,
+                block_b=bb, interpret=_interpret())
+            return out[..., :d]
+
+        def ref_fn(h):
+            return _gather_loop(edge_src, edge_dst, edge_valid, h, op=op)
+
+        return _with_ref_vjp(kernel, ref_fn)(h)
+
+    def attention(self, q, k, v, *, causal=True, window=None, scale=None,
+                  bq=128, bk=128):
+        sq, skv = q.shape[2], k.shape[2]
+        bq_, bk_ = min(bq, sq), min(bk, skv)
+        if sq % bq_ or skv % bk_:
+            # Padding the sequence axes would shift the causal-offset
+            # alignment (qpos = skv - sq + i); rather than re-deriving masks
+            # for padded layouts we require block-multiple shapes for the
+            # kernel path and fall back to the oracle otherwise.
+            return ref.flash_attention(q, k, v, causal=causal, scale=scale,
+                                       window=window)
+
+        def kernel(q, k, v):
+            return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                       scale=scale, bq=bq_, bk=bk_,
+                                       interpret=_interpret())
+
+        def ref_fn(q, k, v):
+            return ref.flash_attention(q, k, v, causal=causal, scale=scale,
+                                       window=window)
+
+        return _with_ref_vjp(kernel, ref_fn)(q, k, v)
+
+
+# --------------------------------------------------------------------------
+# registry + resolution
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict[str, KernelBackend] = {}
+_ALIASES: dict[str, str] = {"ref": "reference"}   # legacy env value
+
+
+def register_backend(backend: KernelBackend, *,
+                     aliases: tuple[str, ...] = ()) -> KernelBackend:
+    """Register a backend under ``backend.name`` (plus optional aliases).
+    Re-registering a name replaces it — deliberate, so tests/plugins can
+    swap implementations."""
+    _REGISTRY[backend.name] = backend
+    for a in aliases:
+        _ALIASES[a] = backend.name
+    return backend
+
+
+def get_backend(name: str) -> KernelBackend:
+    key = _ALIASES.get(name, name)
+    try:
+        return _REGISTRY[key]
+    except KeyError:
+        raise ValueError(f"unknown kernel backend {name!r}; "
+                         f"registered: {list_backends()}") from None
+
+
+def list_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve(op: str | None = None,
+            override: str | KernelBackend | None = None) -> KernelBackend:
+    """Resolve the backend for one op (see module docstring for precedence).
+
+    ``override`` may be a backend name or an actual backend object (e.g. a
+    :func:`composite_backend`); ``op=None`` skips the per-op env override.
+    """
+    if override is not None:
+        if isinstance(override, str):
+            return get_backend(override)
+        return override
+    if op is not None:
+        per_op = os.environ.get(f"REPRO_KERNEL_BACKEND_{op.upper()}")
+        if per_op:
+            return get_backend(per_op)
+    return get_backend(os.environ.get("REPRO_KERNEL_BACKEND",
+                                      DEFAULT_BACKEND))
+
+
+class _CompositeBackend:
+    """Routes each op to its own backend (per-op selection)."""
+
+    def __init__(self, default: KernelBackend,
+                 per_op: dict[str, KernelBackend]):
+        self.default = default
+        self.per_op = per_op
+        ops = ",".join(f"{k}={v.name}" for k, v in sorted(per_op.items()))
+        self.name = f"composite({default.name}; {ops})"
+        for op in OP_NAMES:
+            setattr(self, op, getattr(per_op.get(op, default), op))
+
+
+def composite_backend(default: str | KernelBackend,
+                      per_op: dict[str, str | KernelBackend]) -> KernelBackend:
+    """Build a backend that answers each op from a different registry entry
+    (``runtime.compile(..., op_backends={...})`` uses this)."""
+    for op in per_op:
+        if op not in OP_NAMES:
+            raise ValueError(f"unknown op {op!r}; ops: {OP_NAMES}")
+    return _CompositeBackend(
+        resolve(override=default),
+        {op: resolve(override=b) for op, b in per_op.items()})
+
+
+register_backend(PallasBackend())
+register_backend(JaxBackend())
+register_backend(ReferenceBackend(), aliases=("ref",))

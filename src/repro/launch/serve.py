@@ -63,7 +63,7 @@ def _serve_gnn(args) -> None:
 
     from repro.graphs.datasets import DATASETS
 
-    engine = GNNServeEngine(max_shard_n=args.shard_n)
+    engine = GNNServeEngine(max_shard_n=args.shard_n, backend=args.backend)
     datasets = {}
     for g in graphs:
         # pre-check against the engine's densification limit BEFORE paying
@@ -126,6 +126,11 @@ def main() -> None:
     # GNN path
     ap.add_argument("--graphs", default="cora")
     ap.add_argument("--models", default="gcn,gat")
+    ap.add_argument("--backend", default=None,
+                    choices=["pallas", "jax", "reference", "ref"],
+                    help="kernel backend pinned into each compiled "
+                         "Executable (default: REPRO_KERNEL_BACKEND env, "
+                         "else pallas)")
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--hidden", type=int, default=16)
     ap.add_argument("--heads", type=int, default=2)

@@ -34,7 +34,6 @@ def main() -> None:
     from repro.configs.registry import get_config, get_smoke
     from repro.checkpoint.manager import CheckpointManager
     from repro.dist.shardings import ShardingRules
-    from repro.models import lm
     from repro.training.optimizer import AdamWConfig
     from repro.training.train_loop import (TrainLoop, init_train_state,
                                            make_train_step)

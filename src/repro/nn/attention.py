@@ -16,8 +16,6 @@ Design notes (dry-run fidelity — see DESIGN.md §5):
 """
 from __future__ import annotations
 
-import math
-
 import jax
 import jax.numpy as jnp
 

@@ -1,0 +1,27 @@
+"""repro.runtime — the compile-style GNN execution API.
+
+    from repro import runtime
+    exe = runtime.compile(spec, graph, backend="reference")
+    logits = exe.forward()                  # full graph
+    classes, probs = exe.predict([0, 7, 9]) # node batch, cached softmax
+    print(exe.summary())
+
+One ``compile()`` call replaces the old hand-chained
+``plan_model → build_zoo_graph → init_zoo → zoo_forward`` pipeline (those
+remain as deprecation shims in :mod:`repro.gnn.models`). Kernel backends
+(``pallas`` / ``jax`` / ``reference``) are pluggable per compile and per
+op via :mod:`repro.kernels.registry`.
+"""
+from repro.gnn.executor import clear_plan_cache, plan_cache_stats
+from repro.kernels.registry import (KernelBackend, get_backend,
+                                    list_backends, register_backend)
+from repro.runtime.api import compile, graph_fingerprint
+from repro.runtime.cache import GraphStore, default_store
+from repro.runtime.executable import Executable
+from repro.runtime.forward import forward
+
+__all__ = [
+    "compile", "Executable", "forward", "GraphStore", "default_store",
+    "KernelBackend", "get_backend", "list_backends", "register_backend",
+    "plan_cache_stats", "clear_plan_cache", "graph_fingerprint",
+]

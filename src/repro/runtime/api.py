@@ -1,0 +1,131 @@
+"""`runtime.compile(spec, graph) -> Executable` — the one public entry.
+
+The compile step is where the GNNerator Controller's planning lives: the
+Table-I cost model picks (B, n, S, order, fused) per layer, the graph is
+sharded + normalization-baked once per signature (shared via the
+GraphStore), parameters are initialized (or adopted), and the forward is
+jitted against one pinned kernel backend. Everything downstream — serving,
+examples, benchmarks — holds an Executable instead of hand-chaining
+planner/shard/init/forward.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+
+import jax
+import numpy as np
+
+from repro.core.perf_model import GNNERATOR, Platform
+from repro.gnn.executor import plan_model
+from repro.gnn.models import ZooSpec, init_zoo
+from repro.kernels import registry
+from repro.runtime.cache import GraphStore, default_store
+from repro.runtime.executable import Executable
+
+
+def graph_fingerprint(edges: np.ndarray, num_nodes: int,
+                      features: np.ndarray | None = None) -> str:
+    """Cheap content key for an unnamed graph: shape/dtype plus a strided
+    sample of the edge list AND the feature matrix (hashing all of
+    reddit's ~115M edges per compile would dominate compile time).
+    Features participate because the GraphStore caches the shard-grouped
+    feature tensor under this key — same topology + different features
+    must not collide."""
+    h = hashlib.sha1()
+    edges = np.ascontiguousarray(edges)
+    step = max(1, edges.shape[0] // 1024)
+    h.update(str((edges.shape, str(edges.dtype), num_nodes)).encode())
+    h.update(edges[::step].tobytes())
+    if features is not None:
+        feats = np.ascontiguousarray(features)
+        fstep = max(1, feats.shape[0] // 256)
+        h.update(str((feats.shape, str(feats.dtype))).encode())
+        h.update(feats[::fstep].tobytes())
+    return h.hexdigest()
+
+
+def _as_graph(graph):
+    """Accept a GraphData, or (edges, num_nodes[, features])."""
+    if hasattr(graph, "edges") and hasattr(graph, "profile"):
+        return graph.edges, graph.profile.num_nodes, graph.features
+    if isinstance(graph, (tuple, list)):
+        if len(graph) == 2:
+            edges, num_nodes = graph
+            return np.asarray(edges), int(num_nodes), None
+        edges, num_nodes, features = graph
+        return np.asarray(edges), int(num_nodes), features
+    raise TypeError(
+        f"graph must be a GraphData or (edges, num_nodes[, features]) "
+        f"tuple, got {type(graph).__name__}")
+
+
+def compile(spec: ZooSpec, graph, *,
+            platform: Platform = GNNERATOR,
+            backend: str | registry.KernelBackend | None = None,
+            op_backends: dict | None = None,
+            params: dict | None = None,
+            seed: int = 0,
+            max_shard_n: int = 1024,
+            block_candidates: tuple[int, ...] | None = None,
+            store: GraphStore | None = None,
+            graph_key=None,
+            donate_features: bool = False,
+            plan_cache_dir=None) -> Executable:
+    """Plan, shard, initialize and jit one zoo model for one graph.
+
+    Args:
+      spec: the :class:`~repro.gnn.models.ZooSpec` to compile.
+      graph: a :class:`~repro.graphs.datasets.GraphData` or an
+        ``(edges, num_nodes[, features])`` tuple.
+      platform: the performance-model platform the planner optimizes for.
+      backend: kernel backend name/object; None resolves from the
+        ``REPRO_KERNEL_BACKEND`` env var (default ``pallas``) and is then
+        *pinned* into the Executable.
+      op_backends: optional per-op overrides, e.g.
+        ``{"gather_aggregate": "jax"}`` — merged over ``backend``.
+      params: adopt an existing param pytree; None initializes from seed.
+      max_shard_n: planner cap on nodes per shard.
+      store: GraphStore for the signature-keyed GraphTensors build
+        (default: the module-wide store, so repeat compiles share builds).
+      graph_key: cache key naming the graph contents (default: a
+        fingerprint of the edge list).
+      donate_features: jit the features-passed forward path with the input
+        buffer donated.
+      plan_cache_dir: persist/load plans as JSON (default: env
+        ``REPRO_PLAN_CACHE``).
+    """
+    edges, num_nodes, features = _as_graph(graph)
+    # precedence per op: explicit op_backends > explicit backend arg >
+    # REPRO_KERNEL_BACKEND_<OP> env > global env > default. An explicit
+    # backend arg deliberately beats the per-op env vars; when none is
+    # given, the env overrides must survive into the pinned Executable.
+    per_op = dict(op_backends or {})
+    if backend is None:
+        for op in registry.OP_NAMES:
+            env = os.environ.get(f"REPRO_KERNEL_BACKEND_{op.upper()}")
+            if env and op not in per_op:
+                per_op[op] = env
+    be = registry.resolve(None, backend)
+    if per_op:
+        be = registry.composite_backend(be, per_op)
+
+    plan_kwargs = dict(platform=platform, max_n=max_shard_n,
+                       cache_dir=plan_cache_dir)
+    if block_candidates is not None:
+        plan_kwargs["block_candidates"] = tuple(block_candidates)
+    plan = plan_model(spec, num_nodes, int(edges.shape[0]), **plan_kwargs)
+
+    if graph_key is None:
+        graph_key = graph_fingerprint(edges, num_nodes, features)
+    # explicit None check: GraphStore has __len__, so an empty store is falsy
+    entry = (default_store() if store is None else store).get(
+        graph_key, edges, num_nodes, plan.shard_n, spec.arch,
+        features=features)
+
+    if params is None:
+        params = init_zoo(jax.random.key(seed), spec)
+
+    return Executable(spec=spec, plan=plan, backend=be, gt=entry.gt,
+                      h_grouped=entry.h_grouped, params=params,
+                      graph_key=graph_key, donate_features=donate_features)

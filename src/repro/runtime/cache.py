@@ -1,0 +1,92 @@
+"""Signature-keyed GraphTensors store (GNNIE-style graph-specific caching).
+
+The expensive compile-time artifact is the sharded, normalization-baked
+:class:`~repro.core.engines.GraphTensors` (+ shard-grouped features). One
+store entry is keyed on ``(graph_key, normalize, self_loops, shard_n)`` —
+exactly the signature :func:`repro.gnn.models.graph_signature` assigns each
+architecture — so every Executable whose model needs the same signature
+shares one build. Entries are LRU-evicted at a configurable capacity.
+
+``runtime.compile`` uses a module-default store; the serving engine owns a
+private one so its capacity and stats are isolated per engine instance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engines import GraphTensors
+from repro.gnn.models import graph_signature
+
+
+@dataclasses.dataclass
+class GraphEntry:
+    gt: GraphTensors
+    h_grouped: jax.Array | None     # (S, n, F) shard-grouped features
+    built_ms: float
+
+
+class GraphStore:
+    """LRU cache of sharded graph builds, keyed by normalization signature."""
+
+    def __init__(self, max_entries: int = 8):
+        self._entries: OrderedDict[tuple, GraphEntry] = OrderedDict()
+        self.max_entries = max_entries
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, graph_key, edges: np.ndarray, num_nodes: int,
+            shard_n: int, arch: str,
+            features: np.ndarray | None = None) -> GraphEntry:
+        """Fetch-or-build the GraphTensors for ``arch``'s signature.
+
+        ``graph_key`` identifies the graph *contents* (the serving engine
+        uses its registered name; standalone compiles use a fingerprint).
+        Features are grouped once and cached alongside; an entry built
+        featureless is upgraded in place on the first featureful request.
+        """
+        from repro.runtime.forward import build_graph_tensors
+
+        norm, loops = graph_signature(arch)
+        key = (graph_key, norm, loops, shard_n)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.stats["hits"] += 1
+            self._entries.move_to_end(key)
+            if entry.h_grouped is None and features is not None:
+                entry.h_grouped = entry.gt.group(jnp.asarray(features))
+            return entry
+        self.stats["misses"] += 1
+        t0 = time.perf_counter()
+        gt = build_graph_tensors(edges, num_nodes, shard_n, arch)
+        h = gt.group(jnp.asarray(features)) if features is not None else None
+        entry = GraphEntry(gt=gt, h_grouped=h,
+                           built_ms=(time.perf_counter() - t0) * 1e3)
+        self._entries[key] = entry
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+            self.stats["evictions"] += 1
+        return entry
+
+    def evict(self, graph_key=None) -> None:
+        """Drop entries for one graph_key, or everything when None."""
+        if graph_key is None:
+            self._entries.clear()
+            return
+        for key in [k for k in self._entries if k[0] == graph_key]:
+            del self._entries[key]
+
+
+# module-default store shared by standalone runtime.compile() calls
+_DEFAULT_STORE = GraphStore()
+
+
+def default_store() -> GraphStore:
+    return _DEFAULT_STORE

@@ -1,0 +1,184 @@
+"""The compiled unit the runtime hands back: plan + graph + params + jit.
+
+An :class:`Executable` owns everything needed to run one zoo model on one
+graph on one kernel backend:
+
+  * the :class:`~repro.gnn.executor.ModelPlan` (content-hash memoized by
+    the planner),
+  * the signature-keyed :class:`~repro.core.engines.GraphTensors` build
+    (shared across Executables via the runtime GraphStore),
+  * a jitted forward — full-graph (`forward`) and node-batch
+    (`forward_nodes` / `predict`) entry points; the node-batch path is
+    answered from a cached full-graph softmax, the natural unit of work on
+    the accelerator (one shard-grid sweep per layer covers every node),
+  * plan/param serialization (`save_plan`, `save_params`, `load_params`).
+
+The kernel backend is pinned at compile time: later changes to the
+``REPRO_KERNEL_BACKEND`` env var do not retroactively re-route a compiled
+Executable.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engines import GraphTensors
+from repro.gnn.executor import ModelPlan
+from repro.gnn.models import ZooSpec
+from repro.kernels.registry import KernelBackend
+from repro.runtime import forward as _fwd
+
+
+def _softmax(x: np.ndarray) -> np.ndarray:
+    x = x - x.max(axis=-1, keepdims=True)
+    e = np.exp(x)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def _flatten_params(tree, prefix="", out=None) -> dict:
+    if out is None:
+        out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            _flatten_params(v, f"{prefix}{k}/", out)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            _flatten_params(v, f"{prefix}{i}/", out)
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten_params(flat: dict):
+    root: dict = {}
+    for key, val in flat.items():
+        node = root
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(val)
+
+    def listify(node):
+        if not isinstance(node, dict):
+            return node
+        if node and all(k.isdigit() for k in node):
+            return [listify(node[str(i)]) for i in range(len(node))]
+        return {k: listify(v) for k, v in node.items()}
+
+    return listify(root)
+
+
+class Executable:
+    """A zoo model compiled against one graph, plan and kernel backend."""
+
+    def __init__(self, *, spec: ZooSpec, plan: ModelPlan,
+                 backend: KernelBackend, gt: GraphTensors,
+                 h_grouped: jax.Array | None, params: dict,
+                 graph_key=None, donate_features: bool = False):
+        self.spec = spec
+        self.plan = plan
+        self.backend = backend
+        self.gt = gt
+        self.params = params
+        self.graph_key = graph_key
+        self._h_grouped = h_grouped
+        self._probs: np.ndarray | None = None
+
+        def fwd(p, h):
+            return _fwd.forward(spec, p, gt, h, plans=plan.layers,
+                                backend=backend)
+
+        self._jit_forward = jax.jit(fwd)
+        # the donated variant consumes the caller's fresh feature buffer so
+        # XLA can reuse it for layer intermediates; only sound for features
+        # passed per call (the cached buffer must survive repeat calls)
+        self._jit_forward_donate = (
+            jax.jit(fwd, donate_argnums=(1,)) if donate_features else None)
+
+    # -- forward entry points ---------------------------------------------
+
+    @property
+    def backend_name(self) -> str:
+        return self.backend.name
+
+    def forward(self, params: dict | None = None,
+                features: np.ndarray | jax.Array | None = None) -> jax.Array:
+        """Full-graph logits (N, num_classes).
+
+        ``features`` (N, F) overrides the compiled-in graph features (they
+        are shard-grouped here); ``params`` overrides the compiled-in
+        parameters — both stay differentiable/jit-stable, so this is also
+        the training entry point.
+        """
+        p = self.params if params is None else params
+        if features is None:
+            if self._h_grouped is None:
+                raise ValueError("compiled without features; pass features=")
+            return self._jit_forward(p, self._h_grouped)
+        h = self.gt.group(jnp.asarray(features))
+        if self._jit_forward_donate is not None:
+            return self._jit_forward_donate(p, h)
+        return self._jit_forward(p, h)
+
+    def forward_nodes(self, node_ids, params: dict | None = None) -> jax.Array:
+        """Node-batch logits (k, num_classes) for ``node_ids``."""
+        ids = jnp.asarray(node_ids)
+        return self.forward(params)[ids]
+
+    def full_probs(self) -> np.ndarray:
+        """Cached full-graph class probabilities (N, C); computed once per
+        parameter set, then every node-batch request is a pure gather."""
+        if self._probs is None:
+            logits = self.forward()
+            self._probs = _softmax(
+                np.asarray(jax.device_get(logits), dtype=np.float32))
+        return self._probs
+
+    def predict(self, node_ids) -> tuple[np.ndarray, np.ndarray]:
+        """(classes, probs) for a node batch, served from the cached
+        full-graph softmax."""
+        p = self.full_probs()[np.asarray(node_ids, dtype=np.int64)]
+        return (np.argmax(p, axis=-1).astype(np.int32),
+                np.max(p, axis=-1).astype(np.float32))
+
+    @property
+    def has_cached_probs(self) -> bool:
+        return self._probs is not None
+
+    def invalidate(self) -> None:
+        """Drop the cached full-graph probabilities (e.g. weight swap)."""
+        self._probs = None
+
+    def set_params(self, params: dict) -> None:
+        self.params = params
+        self.invalidate()
+
+    # -- introspection / serialization ------------------------------------
+
+    def summary(self) -> str:
+        n_params = sum(int(np.prod(np.shape(x)))
+                       for x in jax.tree_util.tree_leaves(self.params))
+        head = (f"Executable[{self.spec.arch}] backend={self.backend.name} "
+                f"params={n_params} grid={self.gt.S}x{self.gt.S} "
+                f"n={self.gt.n}")
+        return head + "\n" + self.plan.summary()
+
+    def plan_json(self) -> dict:
+        return self.plan.to_json()
+
+    def save_plan(self, path) -> None:
+        pathlib.Path(path).write_text(
+            json.dumps(self.plan_json(), indent=2) + "\n")
+
+    def save_params(self, path) -> None:
+        np.savez(path, **_flatten_params(self.params))
+
+    def load_params(self, path) -> dict:
+        with np.load(path) as z:
+            params = _unflatten_params(dict(z))
+        self.set_params(params)
+        return params

@@ -1,3 +1,4 @@
-from repro.serving.engine import ServeEngine  # noqa: F401
-from repro.serving.gnn_engine import (GNNServeEngine, NodeRequest,  # noqa: F401
-                                      Prediction)
+from repro.serving.engine import ServeEngine
+from repro.serving.gnn_engine import GNNServeEngine, NodeRequest, Prediction
+
+__all__ = ["ServeEngine", "GNNServeEngine", "NodeRequest", "Prediction"]

@@ -1,25 +1,28 @@
-"""Batched GNN node-classification serving (GNNIE-style graph caching).
+"""Batched GNN node-classification serving over compiled Executables.
 
 Requests name a registered graph + model and a set of node ids; the engine
 groups pending requests by (model, graph) into micro-batches and answers
-each batch from a two-level cache:
+each batch from a compiled :class:`repro.runtime.Executable`, cached per
+(model, graph). The two serving caches are now both runtime-owned:
 
-  * **graph-tensor cache** — the expensive artifact is the sharded,
-    normalization-baked ``GraphTensors`` (+ shard-grouped features). It is
-    keyed on ``(graph, normalize, self_loops, shard_n)`` — the exact
-    signature :func:`repro.gnn.models.graph_signature` assigns each
-    architecture — so every model needing the same signature shares one
-    entry. LRU-evicted at a configurable capacity.
+  * **graph-tensor cache** — the engine owns a private
+    :class:`repro.runtime.GraphStore`; ``runtime.compile`` pulls each
+    Executable's sharded, normalization-baked ``GraphTensors`` (+
+    shard-grouped features) from it, keyed on ``(graph, normalize,
+    self_loops, shard_n)`` — the signature
+    :func:`repro.gnn.models.graph_signature` assigns each architecture —
+    so every model needing the same signature shares one entry.
+    LRU-evicted at a configurable capacity.
   * **logits cache** — full-graph inference is the natural unit on an
-    accelerator (one shard-grid sweep per layer covers every node), so the
-    first request against a (model, graph) pair computes class
-    probabilities for ALL nodes once; every later node id on that pair is
-    a pure gather from the cached array. Invalidate with
-    :meth:`GNNServeEngine.invalidate` after a weight swap.
+    accelerator (one shard-grid sweep per layer covers every node), so
+    each Executable computes class probabilities for ALL nodes once
+    (:meth:`Executable.full_probs`); every later node id on that pair is
+    a pure gather. Invalidate with :meth:`GNNServeEngine.invalidate`
+    after a weight swap.
 
-Layer execution is planned per (model, graph) by ``repro.gnn.executor`` —
-block size B, traversal order and fused/two-stage per layer from the
-Table-I cost model, shard size from the on-chip budget.
+Layer execution plans come from the content-hash-memoized planner inside
+``runtime.compile`` — block size B, traversal order and fused/two-stage
+per layer from the Table-I cost model, shard size from the on-chip budget.
 """
 from __future__ import annotations
 
@@ -28,14 +31,11 @@ import time
 from collections import OrderedDict
 from typing import Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engines import GraphTensors
-from repro.gnn.executor import ModelPlan, plan_model
-from repro.gnn.models import (ZooSpec, build_zoo_graph, graph_signature,
-                              init_zoo, zoo_forward)
+from repro import runtime
+from repro.gnn.executor import ModelPlan
+from repro.gnn.models import ZooSpec, init_zoo
 from repro.graphs.datasets import GraphData
 
 
@@ -59,40 +59,42 @@ class Prediction:
 
 
 @dataclasses.dataclass
-class _GraphEntry:
-    gt: GraphTensors
-    h_grouped: jax.Array            # (S, n, F) shard-grouped features
-    built_ms: float
-
-
-@dataclasses.dataclass
 class _ModelEntry:
     spec: ZooSpec
     params: dict
-    plans: dict[str, ModelPlan] = dataclasses.field(default_factory=dict)
 
 
 class GNNServeEngine:
     """Batched node-classification inference over named graphs/models."""
 
     def __init__(self, *, max_graph_entries: int = 8,
-                 max_shard_n: int = 1024, max_dense_gib: float = 8.0):
+                 max_shard_n: int = 1024, max_dense_gib: float = 8.0,
+                 backend: str | None = None):
         self._graphs: dict[str, GraphData] = {}
         self._models: dict[str, _ModelEntry] = {}
-        self._graph_cache: OrderedDict[tuple, _GraphEntry] = OrderedDict()
-        # full-graph class probabilities per (model, graph): softmax is
-        # applied once at insert so warm requests only pay a gather
-        self._logits_cache: dict[tuple[str, str], np.ndarray] = {}
+        self._store = runtime.GraphStore(max_entries=max_graph_entries)
+        # compiled (model, graph) units; each owns the full-graph softmax
+        # that warm requests gather from
+        self._executables: dict[tuple[str, str], runtime.Executable] = {}
         self._pending: list[NodeRequest] = []
-        self.max_graph_entries = max_graph_entries
         self.max_shard_n = max_shard_n
         self.max_dense_gib = max_dense_gib
-        self.stats = {
-            "graph_cache_hits": 0, "graph_cache_misses": 0,
-            "graph_cache_evictions": 0,
+        self.backend = backend
+        self._stats = {
             "logits_cache_hits": 0, "logits_cache_misses": 0,
             "requests": 0, "batches": 0, "nodes_served": 0,
+            "compiles": 0,
         }
+
+    @property
+    def stats(self) -> dict:
+        """Serving counters merged with the runtime graph-store counters
+        (kept under the historical key names)."""
+        s = self._store.stats
+        return {**self._stats,
+                "graph_cache_hits": s["hits"],
+                "graph_cache_misses": s["misses"],
+                "graph_cache_evictions": s["evictions"]}
 
     # -- registration ------------------------------------------------------
 
@@ -109,80 +111,48 @@ class GNNServeEngine:
                 f"dataset (make_dataset(..., scale=...)) or raise "
                 f"max_dense_gib")
         self._graphs[name] = data
-        # stale sharded tensors / logits for a replaced graph must go
-        self._evict_graph(name)
+        # stale sharded tensors / executables for a replaced graph must go
+        self._store.evict(name)
+        for key in [k for k in self._executables if k[1] == name]:
+            del self._executables[key]
 
     def register_model(self, name: str, spec: ZooSpec,
                        params: dict | None = None, *, seed: int = 0) -> None:
         if params is None:
+            import jax
             params = init_zoo(jax.random.key(seed), spec)
         self._models[name] = _ModelEntry(spec=spec, params=params)
-        self.invalidate(model=name)
+        # a (re-)registered model invalidates its compiled units wholesale:
+        # the spec (and thus plan/graph signature) may have changed
+        for key in [k for k in self._executables if k[0] == name]:
+            del self._executables[key]
 
     def invalidate(self, *, model: str | None = None,
                    graph: str | None = None) -> None:
         """Drop cached logits (e.g. after a parameter update)."""
-        keep = {}
-        for (m, g), v in self._logits_cache.items():
+        for (m, g), exe in self._executables.items():
             if (model is None or m == model) and (graph is None or g == graph):
-                continue
-            keep[(m, g)] = v
-        self._logits_cache = keep
+                exe.invalidate()
 
-    def _evict_graph(self, name: str) -> None:
-        for key in [k for k in self._graph_cache if k[0] == name]:
-            del self._graph_cache[key]
-        for ent in self._models.values():   # plans were shaped by the old graph
-            ent.plans.pop(name, None)
-        self.invalidate(graph=name)
+    # -- compile path ------------------------------------------------------
 
-    # -- graph-tensor cache ------------------------------------------------
-
-    def _graph_entry(self, graph: str, arch: str, shard_n: int) -> _GraphEntry:
-        norm, loops = graph_signature(arch)
-        key = (graph, norm, loops, shard_n)
-        if key in self._graph_cache:
-            self.stats["graph_cache_hits"] += 1
-            self._graph_cache.move_to_end(key)
-            return self._graph_cache[key]
-        self.stats["graph_cache_misses"] += 1
-        data = self._graphs[graph]
-        t0 = time.perf_counter()
-        gt = build_zoo_graph(data.edges, data.profile.num_nodes, shard_n, arch)
-        entry = _GraphEntry(gt=gt, h_grouped=gt.group(jnp.asarray(data.features)),
-                            built_ms=(time.perf_counter() - t0) * 1e3)
-        self._graph_cache[key] = entry
-        while len(self._graph_cache) > self.max_graph_entries:
-            self._graph_cache.popitem(last=False)
-            self.stats["graph_cache_evictions"] += 1
-        return entry
-
-    # -- inference ---------------------------------------------------------
+    def executable(self, model: str, graph: str) -> runtime.Executable:
+        """Fetch-or-compile the Executable serving a (model, graph) pair."""
+        key = (model, graph)
+        exe = self._executables.get(key)
+        if exe is None:
+            ent = self._models[model]
+            exe = runtime.compile(
+                ent.spec, self._graphs[graph], params=ent.params,
+                backend=self.backend, max_shard_n=self.max_shard_n,
+                store=self._store, graph_key=graph)
+            self._executables[key] = exe
+            self._stats["compiles"] += 1
+        return exe
 
     def model_plan(self, model: str, graph: str) -> ModelPlan:
-        """Lazily plan (and memoize) a model's layer execution for a graph."""
-        ent = self._models[model]
-        if graph not in ent.plans:
-            data = self._graphs[graph]
-            ent.plans[graph] = plan_model(
-                ent.spec, data.profile.num_nodes, data.edges.shape[0],
-                max_n=self.max_shard_n)
-        return ent.plans[graph]
-
-    def _full_graph_probs(self, model: str, graph: str) -> np.ndarray:
-        key = (model, graph)
-        if key in self._logits_cache:
-            self.stats["logits_cache_hits"] += 1
-            return self._logits_cache[key]
-        self.stats["logits_cache_misses"] += 1
-        ent = self._models[model]
-        plan = self.model_plan(model, graph)
-        gentry = self._graph_entry(graph, ent.spec.arch, plan.shard_n)
-        logits = zoo_forward(ent.spec, ent.params, gentry.gt,
-                             gentry.h_grouped, plans=plan.layers)
-        probs = _softmax(np.asarray(jax.device_get(logits), dtype=np.float32))
-        self._logits_cache[key] = probs
-        return probs
+        """The layer-execution plan a (model, graph) pair is compiled with."""
+        return self.executable(model, graph).plan
 
     # -- request path ------------------------------------------------------
 
@@ -219,12 +189,16 @@ class GNNServeEngine:
         out: list[Prediction | None] = [None] * len(requests)
         for (model, graph), idxs in groups.items():
             t0 = time.perf_counter()
+            exe = self.executable(model, graph)
             # one cache touch per request: the group's first touch may
-            # compute full-graph probabilities, the rest count as hits
+            # compute the full-graph softmax, the rest count as hits
             for _ in idxs:
-                probs = self._full_graph_probs(model, graph)
+                hit = exe.has_cached_probs
+                self._stats["logits_cache_hits" if hit
+                            else "logits_cache_misses"] += 1
+                probs = exe.full_probs()
             ms = (time.perf_counter() - t0) * 1e3
-            self.stats["batches"] += 1
+            self._stats["batches"] += 1
             for i in idxs:
                 ids = np.asarray(requests[i].node_ids, dtype=np.int64)
                 p = probs[ids]
@@ -233,8 +207,8 @@ class GNNServeEngine:
                     classes=np.argmax(p, axis=-1).astype(np.int32),
                     probs=np.max(p, axis=-1).astype(np.float32),
                     latency_ms=ms)
-                self.stats["requests"] += 1
-                self.stats["nodes_served"] += int(ids.size)
+                self._stats["requests"] += 1
+                self._stats["nodes_served"] += int(ids.size)
         return out  # type: ignore[return-value]
 
     def cache_report(self) -> str:
@@ -242,14 +216,9 @@ class GNNServeEngine:
         g_tot = s["graph_cache_hits"] + s["graph_cache_misses"]
         l_tot = s["logits_cache_hits"] + s["logits_cache_misses"]
         return (f"graph-tensor cache: {s['graph_cache_hits']}/{g_tot} hits "
-                f"({len(self._graph_cache)} resident, "
+                f"({len(self._store)} resident, "
                 f"{s['graph_cache_evictions']} evicted) | "
                 f"logits cache: {s['logits_cache_hits']}/{l_tot} hits | "
+                f"{s['compiles']} executables compiled | "
                 f"{s['requests']} requests, {s['nodes_served']} nodes in "
                 f"{s['batches']} batches")
-
-
-def _softmax(x: np.ndarray) -> np.ndarray:
-    x = x - x.max(axis=-1, keepdims=True)
-    e = np.exp(x)
-    return e / e.sum(axis=-1, keepdims=True)

@@ -7,7 +7,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.dataflow import (Dataflow, best_order, blocked_vs_conventional,
                                  simulate_traffic, table1_costs)
-from repro.core.engines import GNNeratorController, GraphTensors
 from repro.core.models import (build_graph_tensors, init_gnn, make_forward,
                                paper_spec)
 from repro.core.sharding import max_shard_nodes_for_budget, shard_graph
@@ -89,6 +88,22 @@ class TestDataflow:
                                       onchip_bytes=24 * 2 ** 20)
         assert out["S_blocked"] <= out["S_conventional"]
         assert out["traffic_ratio"] > 1.0
+
+    def test_blocked_traffic_uses_ceil_block_count(self):
+        """Regression: with B ∤ D the last partial block still sweeps the
+        grid, so blocked traffic must count ceil(D/B)=4 blocks for D=100,
+        B=32 — flooring to 3 undercounted traffic by 25%."""
+        kw = dict(num_nodes=20000, onchip_bytes=24 * 2 ** 20)
+        out = blocked_vs_conventional(D=100, B=32, **kw)
+        # same budget/B -> same shard grid; an exactly-divisible D=128 run
+        # has 4 blocks too, so the per-block byte rate must match
+        out128 = blocked_vs_conventional(D=128, B=32, **kw)
+        assert out["S_blocked"] == out128["S_blocked"]
+        assert out["offchip_bytes_blocked"] == out128["offchip_bytes_blocked"]
+        # and 4 blocks is one-third more traffic than a floor-counted 3
+        out96 = blocked_vs_conventional(D=96, B=32, **kw)
+        assert out["offchip_bytes_blocked"] == pytest.approx(
+            out96["offchip_bytes_blocked"] * 4 / 3)
 
     def test_simulated_traffic_scales_with_blocks(self):
         # edge list is re-walked D/B times (the paper's stated overhead)

@@ -1,6 +1,5 @@
 """Distribution layer: sharding rules (divisibility guards, axis-reuse
 guards), HLO collective parsing, mesh construction purity."""
-import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 swept over shapes and dtypes, plus hypothesis property tests."""
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 

@@ -1,6 +1,5 @@
 """Perf-model + paper-benchmark validation: the analytical platform model
 must reproduce the paper's headline claims within tolerance."""
-import pytest
 
 from benchmarks.paper_tables import (bench_fig3, bench_fig4, bench_fig5,
                                      bench_table1, bench_table5)

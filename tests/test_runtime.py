@@ -1,0 +1,253 @@
+"""repro.runtime: the compile() -> Executable API, plan serialization +
+memoization, backend parity per zoo arch, and the deprecation shims."""
+import json
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import runtime
+from repro.gnn import executor
+from repro.gnn.models import ARCHS, ZooSpec
+from repro.graphs.datasets import TABLE2_DATASETS, make_dataset
+
+# small enough that pallas interpret mode stays fast, scaled per dataset so
+# every Table-II profile is exercised with a multi-shard grid
+SCALES = {"cora": 0.02, "citeseer": 0.015, "pubmed": 0.003}
+
+
+def _spec(arch, prof, hidden=8):
+    return ZooSpec(arch, prof.feature_dim, hidden, prof.num_classes,
+                   num_layers=2, heads=2)
+
+
+class TestCompile:
+    def test_executable_owns_plan_graph_params(self):
+        ds = make_dataset("cora", seed=0, scale=0.05)
+        exe = runtime.compile(_spec("gcn", ds.profile), ds,
+                              backend="reference", max_shard_n=64)
+        assert exe.plan.arch == "gcn"
+        assert exe.backend_name == "reference"
+        assert exe.gt.S == exe.plan.layers[0].S or exe.gt.n <= 64
+        logits = exe.forward()
+        assert logits.shape == (ds.profile.num_nodes, ds.profile.num_classes)
+        assert "Executable[gcn]" in exe.summary()
+
+    def test_forward_accepts_params_and_features(self):
+        ds = make_dataset("cora", seed=0, scale=0.05)
+        exe = runtime.compile(_spec("gcn", ds.profile), ds,
+                              backend="reference", max_shard_n=64)
+        base = np.asarray(exe.forward())
+        # explicit features: same numbers
+        np.testing.assert_allclose(
+            np.asarray(exe.forward(features=ds.features)), base,
+            atol=1e-6, rtol=1e-6)
+        # fresh params: different numbers, same differentiable entry point
+        p2 = runtime.compile(_spec("gcn", ds.profile), ds,
+                             backend="reference", max_shard_n=64,
+                             seed=3).params
+        assert not np.allclose(np.asarray(exe.forward(p2)), base)
+        grads = jax.grad(lambda p: exe.forward(p).sum())(exe.params)
+        assert jax.tree_util.tree_structure(
+            grads) == jax.tree_util.tree_structure(exe.params)
+
+    def test_node_batch_entry_points(self):
+        ds = make_dataset("citeseer", seed=0, scale=0.05)
+        exe = runtime.compile(_spec("gat", ds.profile), ds,
+                              backend="reference", max_shard_n=64)
+        ids = np.array([0, 5, 11])
+        full = np.asarray(exe.forward())
+        np.testing.assert_allclose(np.asarray(exe.forward_nodes(ids)),
+                                   full[ids], atol=1e-6)
+        assert not exe.has_cached_probs
+        classes, probs = exe.predict(ids)
+        assert exe.has_cached_probs
+        np.testing.assert_array_equal(classes,
+                                      np.argmax(full[ids], axis=-1))
+        assert np.all((probs > 0) & (probs <= 1))
+        exe.invalidate()
+        assert not exe.has_cached_probs
+
+    def test_graph_tuple_input_and_fingerprint_sharing(self):
+        ds = make_dataset("cora", seed=0, scale=0.05)
+        store = runtime.GraphStore()
+        spec = _spec("gcn", ds.profile)
+        graph = (ds.edges, ds.profile.num_nodes, ds.features)
+        e1 = runtime.compile(spec, graph, backend="reference",
+                             max_shard_n=64, store=store)
+        e2 = runtime.compile(spec, graph, backend="reference",
+                             max_shard_n=64, store=store)
+        # identical content -> same fingerprint -> one shard build
+        assert store.stats["misses"] == 1 and store.stats["hits"] == 1
+        assert e1.gt is e2.gt
+
+    def test_fingerprint_distinguishes_features(self):
+        """Regression: same topology + different features must not share a
+        GraphStore entry (the entry caches the grouped feature tensor)."""
+        ds = make_dataset("cora", seed=0, scale=0.05)
+        store = runtime.GraphStore()
+        spec = _spec("gcn", ds.profile)
+        feats2 = ds.features + 1.0
+        e1 = runtime.compile(spec, (ds.edges, ds.profile.num_nodes,
+                                    ds.features), backend="reference",
+                             max_shard_n=64, store=store, seed=0)
+        e2 = runtime.compile(spec, (ds.edges, ds.profile.num_nodes, feats2),
+                             backend="reference", max_shard_n=64,
+                             store=store, seed=0)
+        assert e1.graph_key != e2.graph_key
+        assert not np.allclose(np.asarray(e1.forward()),
+                               np.asarray(e2.forward()))
+
+    def test_per_op_env_override_reaches_compile(self, monkeypatch):
+        """Regression: REPRO_KERNEL_BACKEND_<OP> must survive into the
+        pinned Executable when no explicit backend is passed."""
+        monkeypatch.setenv("REPRO_KERNEL_BACKEND", "reference")
+        monkeypatch.setenv("REPRO_KERNEL_BACKEND_GATHER_AGGREGATE", "jax")
+        ds = make_dataset("cora", seed=0, scale=0.05)
+        exe = runtime.compile(_spec("sage_max", ds.profile), ds,
+                              max_shard_n=64)
+        assert exe.backend.gather_aggregate.__self__ is \
+            runtime.get_backend("jax")
+        assert exe.backend.dense_matmul.__self__ is \
+            runtime.get_backend("reference")
+        # an explicit backend argument beats the per-op env override
+        pinned = runtime.compile(_spec("sage_max", ds.profile), ds,
+                                 backend="reference", max_shard_n=64)
+        assert pinned.backend is runtime.get_backend("reference")
+
+    def test_op_backends_override(self):
+        ds = make_dataset("cora", seed=0, scale=0.05)
+        exe = runtime.compile(_spec("sage_max", ds.profile), ds,
+                              backend="reference",
+                              op_backends={"gather_aggregate": "jax"},
+                              max_shard_n=64)
+        assert exe.backend_name.startswith("composite(reference")
+        ref_exe = runtime.compile(_spec("sage_max", ds.profile), ds,
+                                  backend="reference", max_shard_n=64)
+        np.testing.assert_allclose(np.asarray(exe.forward()),
+                                   np.asarray(ref_exe.forward()),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_params_roundtrip(self, tmp_path):
+        ds = make_dataset("cora", seed=0, scale=0.05)
+        exe = runtime.compile(_spec("gin", ds.profile), ds,
+                              backend="reference", max_shard_n=64)
+        before = np.asarray(exe.forward())
+        exe.save_params(tmp_path / "p.npz")
+        exe.save_plan(tmp_path / "plan.json")
+        # perturb, then restore from disk
+        exe.set_params(jax.tree_util.tree_map(lambda x: x * 0, exe.params))
+        assert not np.allclose(np.asarray(exe.forward()), before)
+        exe.load_params(tmp_path / "p.npz")
+        np.testing.assert_allclose(np.asarray(exe.forward()), before,
+                                   atol=1e-6)
+        plan = executor.ModelPlan.from_json(
+            json.loads((tmp_path / "plan.json").read_text()))
+        assert plan == exe.plan
+
+
+class TestBackendParity:
+    """Acceptance: compile(..., backend="reference") produces logits
+    allclose to backend="pallas" for every zoo arch on the Table-II
+    datasets (scaled down: pallas runs in interpret mode on CPU)."""
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    @pytest.mark.parametrize("dataset", sorted(TABLE2_DATASETS))
+    def test_reference_matches_pallas(self, arch, dataset):
+        ds = make_dataset(dataset, seed=1, scale=SCALES[dataset])
+        spec = _spec(arch, ds.profile)
+        store = runtime.GraphStore()
+        kw = dict(max_shard_n=16, store=store, graph_key=dataset, seed=0)
+        ref_exe = runtime.compile(spec, ds, backend="reference", **kw)
+        pal_exe = runtime.compile(spec, ds, backend="pallas", **kw)
+        assert ref_exe.plan is pal_exe.plan     # content-hash memo shares
+        np.testing.assert_allclose(
+            np.asarray(pal_exe.forward()), np.asarray(ref_exe.forward()),
+            atol=1e-4, rtol=1e-4)
+
+
+class TestPlanCacheAndSerialization:
+    def test_plan_json_roundtrip(self):
+        prof = TABLE2_DATASETS["cora"]
+        spec = ZooSpec("gat", prof.feature_dim, 16, prof.num_classes,
+                       num_layers=3, heads=2)
+        plan = executor.plan_model(spec, prof.num_nodes, prof.num_edges)
+        blob = json.dumps(plan.to_json())
+        back = executor.ModelPlan.from_json(json.loads(blob))
+        assert back == plan
+        assert back.layers[0].order == plan.layers[0].order
+        assert back.shard_n == plan.shard_n
+
+    def test_plan_model_content_hash_memo(self):
+        executor.clear_plan_cache()
+        prof = TABLE2_DATASETS["citeseer"]
+        spec = ZooSpec("gcn", prof.feature_dim, 16, prof.num_classes)
+        p1 = executor.plan_model(spec, prof.num_nodes, prof.num_edges)
+        p2 = executor.plan_model(spec, prof.num_nodes, prof.num_edges)
+        assert p1 is p2
+        stats = executor.plan_cache_stats()
+        assert stats["misses"] == 1 and stats["hits"] == 1
+        # any input that shapes the plan is part of the key
+        executor.plan_model(spec, prof.num_nodes, prof.num_edges, max_n=64)
+        assert executor.plan_cache_stats()["misses"] == 2
+
+    def test_plan_disk_cache_skips_replanning(self, tmp_path):
+        executor.clear_plan_cache()
+        prof = TABLE2_DATASETS["cora"]
+        spec = ZooSpec("sage_mean", prof.feature_dim, 16, prof.num_classes)
+        p1 = executor.plan_model(spec, prof.num_nodes, prof.num_edges,
+                                 cache_dir=tmp_path)
+        assert len(list(tmp_path.glob("*.json"))) == 1
+        # a "restarted" process: fresh in-memory cache, same disk dir
+        executor.clear_plan_cache()
+        p2 = executor.plan_model(spec, prof.num_nodes, prof.num_edges,
+                                 cache_dir=tmp_path)
+        assert p2 == p1
+        assert executor.plan_cache_stats()["disk_hits"] == 1
+        assert executor.plan_cache_stats()["misses"] == 0
+
+
+class TestDeprecationShims:
+    def test_old_api_warns_and_matches(self):
+        from repro.gnn.models import build_zoo_graph, zoo_forward
+        ds = make_dataset("cora", seed=0, scale=0.05)
+        exe = runtime.compile(_spec("gcn", ds.profile), ds,
+                              backend="reference", max_shard_n=64)
+        with pytest.warns(DeprecationWarning):
+            gt = build_zoo_graph(ds.edges, ds.profile.num_nodes,
+                                 exe.plan.shard_n, "gcn")
+        with pytest.warns(DeprecationWarning):
+            old = zoo_forward(exe.spec, exe.params, gt,
+                              gt.group(jnp.asarray(ds.features)),
+                              plans=exe.plan.layers)
+        np.testing.assert_allclose(np.asarray(old), np.asarray(exe.forward()),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_new_consumers_emit_no_deprecation_warnings(self):
+        ds = make_dataset("cora", seed=0, scale=0.05)
+        from repro.serving.gnn_engine import GNNServeEngine, NodeRequest
+        eng = GNNServeEngine(max_shard_n=64, backend="reference")
+        eng.register_graph("cora", ds)
+        eng.register_model("gcn", _spec("gcn", ds.profile))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            eng.serve([NodeRequest("cora", np.array([0, 1]), model="gcn")])
+
+
+class TestServingOnRuntime:
+    def test_engine_caches_executables(self):
+        ds = make_dataset("cora", seed=0, scale=0.05)
+        from repro.serving.gnn_engine import GNNServeEngine, NodeRequest
+        eng = GNNServeEngine(max_shard_n=64, backend="reference")
+        eng.register_graph("cora", ds)
+        eng.register_model("gcn", _spec("gcn", ds.profile))
+        exe = eng.executable("gcn", "cora")
+        assert isinstance(exe, runtime.Executable)
+        eng.serve([NodeRequest("cora", np.array([0]), model="gcn")])
+        assert eng.executable("gcn", "cora") is exe
+        assert eng.stats["compiles"] == 1
+        # weight swap drops the compiled unit
+        eng.register_model("gcn", _spec("gcn", ds.profile), seed=5)
+        assert eng.executable("gcn", "cora") is not exe

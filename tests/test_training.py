@@ -1,17 +1,14 @@
 """Training substrate: optimizer, schedules, compression, checkpointing,
 fault-tolerant loop."""
-import os
-
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.training.compression import compress_decompress
 from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update,
-                                      global_norm, make_schedule)
+                                      make_schedule)
 
 
 class TestOptimizer:
