@@ -1,12 +1,13 @@
-"""Serve GNN node-classification requests end-to-end.
+"""Serve GNN node-classification requests through the async Server API.
 
-Runs a 2-layer GCN and a 2-layer GAT from the repro.gnn model zoo through
-serving/gnn_engine.py on the synthetic Cora profile. Each (model, graph)
+Runs a 2-layer GCN and a 2-layer GAT from the repro.gnn model zoo behind
+the continuous-batching :class:`repro.serving.Server`. Each (model, graph)
 pair is compiled once via ``repro.runtime`` — the planner picks
 (S, B, order, fused) per layer from the Table-I cost model, the runtime
 GraphStore shards + caches the graph once per normalization signature —
-and batches of node-id requests come back as class predictions with
-cache-hit stats.
+and node-id requests go in as tickets (with priorities and deadlines),
+micro-batch per (model, graph) stream, and come back as typed outcomes
+with per-request queue/engine latency.
 
     PYTHONPATH=src python examples/serve_gnn.py [--scale 1.0] [--requests 32]
 
@@ -34,6 +35,8 @@ def main() -> int:
                          "env var, else reference — fast pure-jnp on CPU)")
     ap.add_argument("--requests", "--num-requests", dest="requests",
                     type=int, default=32)
+    ap.add_argument("--batch-size", type=int, default=8,
+                    help="scheduler max micro-batch size")
     ap.add_argument("--hidden", type=int, default=16)
     args = ap.parse_args()
     backend = (args.backend or os.environ.get("REPRO_KERNEL_BACKEND")
@@ -41,7 +44,9 @@ def main() -> int:
 
     from repro.gnn.models import ZooSpec
     from repro.graphs.datasets import make_dataset
-    from repro.serving.gnn_engine import GNNServeEngine, NodeRequest
+    from repro.serving import (Completed, NodeRequest, SchedulerConfig,
+                               Server)
+    from repro.serving.gnn_engine import GNNServeEngine
 
     ds = make_dataset(args.dataset, seed=0, scale=args.scale)
     prof = ds.profile
@@ -61,25 +66,36 @@ def main() -> int:
     for name in ("gcn-2l", "gat-2l"):
         print("\n" + engine.executable(name, args.dataset).summary())
 
+    server = Server(engine, SchedulerConfig(max_batch_size=args.batch_size))
+
     rng = np.random.default_rng(7)
+    t0 = time.time()
+    tickets = []
     for i in range(args.requests):
         ids = rng.integers(0, prof.num_nodes,
                            size=int(rng.integers(1, 9)))
-        engine.submit(NodeRequest(args.dataset, ids,
-                                  model="gcn-2l" if i % 2 else "gat-2l"))
-
-    t0 = time.time()
-    preds = engine.flush()
+        tickets.append(server.submit(
+            NodeRequest(args.dataset, ids,
+                        model="gcn-2l" if i % 2 else "gat-2l"),
+            priority=1 if i % 8 == 0 else 0))
+    # submit() is non-blocking: tickets are pending until the scheduler runs
+    assert tickets[0].poll() is None
+    server.drain()
     dt = time.time() - t0
 
-    print(f"\nserved {len(preds)} requests in {dt:.2f}s "
-          f"({len(preds) / dt:.1f} req/s); per-request predictions:")
-    for p in preds[:6]:
+    outcomes = [t.result() for t in tickets]
+    done = [o for o in outcomes if isinstance(o, Completed)]
+    print(f"\nserved {len(done)} requests in {dt:.2f}s "
+          f"({len(done) / dt:.1f} req/s); per-request predictions:")
+    for o in done[:6]:
+        p = o.value
         print(f"  {p.model}: nodes {p.node_ids.tolist()} -> "
-              f"classes {p.classes.tolist()}")
-    if len(preds) > 6:
-        print(f"  ... ({len(preds) - 6} more)")
+              f"classes {p.classes.tolist()} "
+              f"(queue {o.queue_ms:.2f} ms, engine {o.engine_ms:.2f} ms)")
+    if len(done) > 6:
+        print(f"  ... ({len(done) - 6} more)")
     print("\n" + engine.cache_report())
+    print(server.report())
     return 0
 
 

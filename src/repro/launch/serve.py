@@ -1,4 +1,11 @@
-"""Production serving launcher. Two paths share it:
+"""Production serving launcher: one scheduler-driven path for both engines.
+
+Both modes build a continuous-batching :class:`repro.serving.Server` over
+their engine (the LM ``ServeEngine`` streams by prompt length, the GNN
+``GNNServeEngine`` by (model, graph)); requests go in as tickets with
+optional priority/deadline, micro-batches form under the hybrid
+max-batch-size + max-wait policy, and outcomes come back typed
+(Completed / Rejected / Expired) with per-request queue/engine latency.
 
 LM generation (default)::
 
@@ -17,12 +24,66 @@ import time
 
 import numpy as np
 
+# NOTE: repro.serving (and through it jax + the model stack) is imported
+# inside the helpers, keeping `--help` / arg errors fast.
+
+
+def _make_server(engine, args):
+    from repro.serving import SchedulerConfig, Server
+
+    return Server(engine, SchedulerConfig(
+        max_batch_size=args.batch_size,
+        max_wait_ms=args.max_wait_ms,
+        max_queue_depth=args.queue_depth))
+
+
+def _submit(server, payload, stats: dict, **kw):
+    """Closed-loop submit: on queue-full backpressure, drive the scheduler
+    to make room and retry instead of silently dropping the request.
+    Retries are counted in ``stats`` (each one shows up in the server's
+    submitted/rejected totals)."""
+    from repro.serving import Rejected
+
+    while True:
+        ticket = server.submit(payload, **kw)
+        out = ticket.poll()
+        if not (isinstance(out, Rejected) and out.kind == "backpressure"):
+            return ticket
+        if server.step(force=True) == 0:
+            return ticket           # no progress possible; keep the reject
+        stats["retries"] = stats.get("retries", 0) + 1
+
+
+def _resolve(server, tickets) -> list:
+    """Drain the scheduler and collect outcomes (submission order)."""
+    server.drain()
+    return [t.result() for t in tickets]
+
+
+def _report(server, stats: dict) -> str:
+    line = server.report()
+    if stats.get("retries"):
+        line += (f" | {stats['retries']} backpressure retries "
+                 f"(counted in submitted/rejected)")
+    return line
+
+
+def _latency_line(outcomes) -> str:
+    from repro.serving import Completed
+
+    lat = [o.latency_ms for o in outcomes if isinstance(o, Completed)]
+    if not lat:
+        return "no completed requests"
+    p50, p95, p99 = np.percentile(lat, [50, 95, 99])
+    return f"latency p50 {p50:.2f} ms, p95 {p95:.2f} ms, p99 {p99:.2f} ms"
+
 
 def _serve_lm(args) -> None:
     import jax
 
     from repro.configs.registry import get_config, get_smoke
     from repro.models import lm
+    from repro.serving import Completed
     from repro.serving.engine import Request, ServeEngine
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -32,30 +93,35 @@ def _serve_lm(args) -> None:
     params = lm.init_params(cfg, jax.random.key(0))
     engine = ServeEngine(cfg, params,
                          max_len=args.prompt_len + args.new_tokens + 1)
+    server = _make_server(engine, args)
 
     rng = np.random.default_rng(0)
     shape = (args.prompt_len, cfg.n_codebooks) if cfg.n_codebooks > 1 \
         else (args.prompt_len,)
-    pending = [Request(rng.integers(0, cfg.vocab_size, shape).astype(np.int32),
-                       max_new_tokens=args.new_tokens,
-                       temperature=args.temperature)
-               for _ in range(args.num_requests)]
-
-    served = 0
+    stats: dict = {}
     t0 = time.time()
-    while pending:                      # simple FIFO batch scheduler
-        batch, pending = pending[:args.batch_size], pending[args.batch_size:]
-        outs = engine.generate(batch, seed=served)
-        served += sum(o.shape[0] for o in outs)
-        print(f"batch of {len(batch)} done ({served} tokens total)")
+    tickets = [_submit(
+        server,
+        Request(rng.integers(0, cfg.vocab_size, shape).astype(np.int32),
+                max_new_tokens=args.new_tokens,
+                temperature=args.temperature),
+        stats)
+        for _ in range(args.num_requests)]
+    outcomes = _resolve(server, tickets)
     dt = time.time() - t0
-    print(f"served {args.num_requests} requests, {served} tokens "
-          f"in {dt:.2f}s ({served / dt:.1f} tok/s)")
+
+    done = [o for o in outcomes if isinstance(o, Completed)]
+    served = sum(o.value.shape[0] for o in done)
+    print(_report(server, stats))
+    print(_latency_line(outcomes))
+    print(f"served {len(done)}/{args.num_requests} requests, {served} "
+          f"tokens in {dt:.2f}s ({served / dt:.1f} tok/s)")
 
 
 def _serve_gnn(args) -> None:
     from repro.gnn.models import ZooSpec
     from repro.graphs.datasets import make_dataset
+    from repro.serving import Completed
     from repro.serving.gnn_engine import GNNServeEngine, NodeRequest
 
     graphs = [g.strip() for g in args.graphs.split(",") if g.strip()]
@@ -89,37 +155,51 @@ def _serve_gnn(args) -> None:
                         num_layers=args.layers, heads=args.heads),
                 seed=0)
 
+    server = _make_server(engine, args)
     rng = np.random.default_rng(1)
-    reqs = []
-    for _ in range(args.num_requests):
+    stats: dict = {}
+    t0 = time.time()
+    tickets = []
+    for i in range(args.num_requests):
         g = graphs[int(rng.integers(len(graphs)))]
         m = models[int(rng.integers(len(models)))]
         n = datasets[g].profile.num_nodes
         ids = rng.integers(0, n, size=int(rng.integers(1, args.nodes_per_req + 1)))
-        reqs.append(NodeRequest(graph=g, node_ids=ids, model=f"{m}@{g}"))
-
-    t0 = time.time()
-    for r in reqs:
-        engine.submit(r)
-    preds = engine.flush()
+        tickets.append(_submit(
+            server, NodeRequest(graph=g, node_ids=ids, model=f"{m}@{g}"),
+            stats,
+            priority=1 if i % 8 == 0 else 0,
+            deadline_ms=args.deadline_ms))
+    outcomes = _resolve(server, tickets)
     dt = time.time() - t0
-    for p in preds[:4]:
+
+    done = [o.value for o in outcomes if isinstance(o, Completed)]
+    for p in done[:4]:
         print(f"  {p.model} on {p.graph}: nodes {p.node_ids[:5].tolist()} -> "
               f"classes {p.classes[:5].tolist()} "
               f"(p={np.round(p.probs[:5], 3).tolist()})")
     print(engine.cache_report())
-    print(f"served {len(preds)} requests in {dt:.2f}s "
-          f"({len(preds) / dt:.1f} req/s)")
+    print(_report(server, stats))
+    print(_latency_line(outcomes))
+    print(f"served {len(done)}/{len(tickets)} requests in {dt:.2f}s "
+          f"({len(done) / dt:.1f} req/s)")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["lm", "gnn"], default="lm")
+    # shared scheduler policy
+    ap.add_argument("--batch-size", type=int, default=4,
+                    help="scheduler max micro-batch size")
+    ap.add_argument("--max-wait-ms", type=float, default=0.0,
+                    help="oldest-entry wait that dispatches an underfull "
+                         "batch (0 = dispatch immediately)")
+    ap.add_argument("--queue-depth", type=int, default=256,
+                    help="per-stream admission bound (backpressure)")
     # LM path
     ap.add_argument("--arch", default="qwen3-8b")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--num-requests", type=int, default=8)
-    ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -137,6 +217,8 @@ def main() -> None:
     ap.add_argument("--shard-n", type=int, default=512)
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--nodes-per-req", type=int, default=8)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline; queued past it -> Expired")
     args = ap.parse_args()
 
     if args.mode == "gnn":

@@ -37,7 +37,10 @@ class GraphStore:
     def __init__(self, max_entries: int = 8):
         self._entries: OrderedDict[tuple, GraphEntry] = OrderedDict()
         self.max_entries = max_entries
-        self.stats = {"hits": 0, "misses": 0, "evictions": 0}
+        # built_ms_total makes rebuild churn visible: entries evicted under
+        # use are rebuilt on the next miss, and only this counter shows it
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0,
+                      "built_ms_total": 0.0}
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -69,6 +72,7 @@ class GraphStore:
         h = gt.group(jnp.asarray(features)) if features is not None else None
         entry = GraphEntry(gt=gt, h_grouped=h,
                            built_ms=(time.perf_counter() - t0) * 1e3)
+        self.stats["built_ms_total"] += entry.built_ms
         self._entries[key] = entry
         while len(self._entries) > self.max_entries:
             self._entries.popitem(last=False)

@@ -1,4 +1,13 @@
-from repro.serving.engine import ServeEngine
+from repro.serving.api import (Completed, Engine, Expired, Failed, Outcome,
+                               Rejected, Server, Ticket)
+from repro.serving.engine import Request, ServeEngine
 from repro.serving.gnn_engine import GNNServeEngine, NodeRequest, Prediction
+from repro.serving.scheduler import MicroBatchScheduler, SchedulerConfig
 
-__all__ = ["ServeEngine", "GNNServeEngine", "NodeRequest", "Prediction"]
+__all__ = [
+    "Server", "Ticket", "Engine", "Outcome",
+    "Completed", "Rejected", "Expired", "Failed",
+    "SchedulerConfig", "MicroBatchScheduler",
+    "ServeEngine", "Request",
+    "GNNServeEngine", "NodeRequest", "Prediction",
+]

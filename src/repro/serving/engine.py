@@ -7,6 +7,13 @@ Requests are grouped into fixed batch slots; a batch prefills together
 shorter prompts simply start decoding earlier positions — their extra
 prefill logits are ignored) and then decodes lock-step with per-request
 stop lengths. Greedy or temperature sampling.
+
+The engine also implements the serving :class:`~repro.serving.api.Engine`
+step protocol — ``route`` buckets requests by prompt length (``generate``
+requires equal-length prompts per batch), ``step`` runs one formed
+micro-batch — so the continuous-batching
+:class:`~repro.serving.api.Server` drives it interchangeably with the GNN
+engine.
 """
 from __future__ import annotations
 
@@ -45,6 +52,26 @@ class ServeEngine:
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode, donate_argnums=(2,))
+        self._step_seed = 0
+
+    # -- Engine step protocol (what the Server drives) ---------------------
+
+    def route(self, req: Request) -> int:
+        """Validate one request and name its stream: the prompt-length
+        bucket, since a batch prefills at one padded length."""
+        plen = len(req.prompt)
+        if plen == 0:
+            raise ValueError("empty prompt")
+        if plen + req.max_new_tokens + 1 > self.max_len:
+            raise ValueError(
+                f"prompt ({plen}) + max_new_tokens ({req.max_new_tokens}) "
+                f"exceeds engine max_len {self.max_len}")
+        return plen
+
+    def step(self, key: int, requests: Sequence[Request]) -> list:
+        """Run one formed micro-batch (all prompts are length ``key``)."""
+        seed, self._step_seed = self._step_seed, self._step_seed + 1
+        return self.generate(list(requests), seed=seed)
 
     def generate(self, requests: Sequence[Request], seed: int = 0):
         """Serve one batch of equal-or-shorter prompts. Returns a list of

@@ -1,9 +1,13 @@
-"""Batched GNN node-classification serving over compiled Executables.
+"""GNN node-classification engine: the compile/cache core under the Server.
 
-Requests name a registered graph + model and a set of node ids; the engine
-groups pending requests by (model, graph) into micro-batches and answers
-each batch from a compiled :class:`repro.runtime.Executable`, cached per
-(model, graph). The two serving caches are now both runtime-owned:
+Requests name a registered graph + model and a set of node ids. The engine
+implements the serving :class:`~repro.serving.api.Engine` step protocol —
+``route`` validates a request and streams it by (model, graph), ``step``
+answers one formed micro-batch from a compiled
+:class:`repro.runtime.Executable`, cached per (model, graph) — so the
+continuous-batching :class:`~repro.serving.api.Server` can drive it
+interchangeably with the LM engine. The two serving caches are both
+runtime-owned:
 
   * **graph-tensor cache** — the engine owns a private
     :class:`repro.runtime.GraphStore`; ``runtime.compile`` pulls each
@@ -20,6 +24,16 @@ each batch from a compiled :class:`repro.runtime.Executable`, cached per
     a pure gather. Invalidate with :meth:`GNNServeEngine.invalidate`
     after a weight swap.
 
+Latency accounting is per request: ``Prediction.engine_ms`` is the time
+spent answering THAT request (the cold full-graph forward is charged to
+the request that triggered it, later requests pay only their gather);
+compile time is never folded into request latency — it accrues to
+``stats["compile_ms_total"]``. ``queue_ms`` is stamped by the Server.
+
+The pre-Server one-shot API (``submit()``/``flush()``) remains as a thin
+synchronous shim emitting ``DeprecationWarning``; ``serve()`` stays as the
+synchronous batch core the shim and the Server path share.
+
 Layer execution plans come from the content-hash-memoized planner inside
 ``runtime.compile`` — block size B, traversal order and fused/two-stage
 per layer from the Table-I cost model, shard size from the on-chip budget.
@@ -28,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import OrderedDict
 from typing import Sequence
 
@@ -55,7 +70,9 @@ class Prediction:
     node_ids: np.ndarray
     classes: np.ndarray             # (k,) int32 argmax class per node
     probs: np.ndarray               # (k,) float32 softmax mass of the argmax
-    latency_ms: float               # engine time for the micro-batch
+    queue_ms: float = 0.0           # admission -> dispatch (Server-stamped)
+    engine_ms: float = 0.0          # THIS request's engine time
+    latency_ms: float = 0.0         # queue_ms + engine_ms (back-compat)
 
 
 @dataclasses.dataclass
@@ -83,7 +100,7 @@ class GNNServeEngine:
         self._stats = {
             "logits_cache_hits": 0, "logits_cache_misses": 0,
             "requests": 0, "batches": 0, "nodes_served": 0,
-            "compiles": 0,
+            "compiles": 0, "compile_ms_total": 0.0,
         }
 
     @property
@@ -94,7 +111,8 @@ class GNNServeEngine:
         return {**self._stats,
                 "graph_cache_hits": s["hits"],
                 "graph_cache_misses": s["misses"],
-                "graph_cache_evictions": s["evictions"]}
+                "graph_cache_evictions": s["evictions"],
+                "graph_built_ms_total": s["built_ms_total"]}
 
     # -- registration ------------------------------------------------------
 
@@ -137,79 +155,114 @@ class GNNServeEngine:
     # -- compile path ------------------------------------------------------
 
     def executable(self, model: str, graph: str) -> runtime.Executable:
-        """Fetch-or-compile the Executable serving a (model, graph) pair."""
+        """Fetch-or-compile the Executable serving a (model, graph) pair.
+
+        Compile time accrues to ``stats["compile_ms_total"]`` — it is a
+        per-(model, graph) setup cost, never charged to request latency.
+        """
         key = (model, graph)
         exe = self._executables.get(key)
         if exe is None:
             ent = self._models[model]
+            t0 = time.perf_counter()
             exe = runtime.compile(
                 ent.spec, self._graphs[graph], params=ent.params,
                 backend=self.backend, max_shard_n=self.max_shard_n,
                 store=self._store, graph_key=graph)
             self._executables[key] = exe
             self._stats["compiles"] += 1
+            self._stats["compile_ms_total"] += \
+                (time.perf_counter() - t0) * 1e3
         return exe
 
     def model_plan(self, model: str, graph: str) -> ModelPlan:
         """The layer-execution plan a (model, graph) pair is compiled with."""
         return self.executable(model, graph).plan
 
-    # -- request path ------------------------------------------------------
+    # -- Engine step protocol (what the Server drives) ---------------------
 
-    def submit(self, req: NodeRequest) -> None:
-        self._pending.append(req)
+    def route(self, req: NodeRequest) -> tuple[str, str]:
+        """Validate one request and name its stream: the (model, graph)
+        pair, so the scheduler micro-batches work that shares an
+        Executable (and its cached full-graph softmax)."""
+        if req.model not in self._models:
+            raise KeyError(f"unknown model {req.model!r}")
+        if req.graph not in self._graphs:
+            raise KeyError(f"unknown graph {req.graph!r}")
+        ids = np.asarray(req.node_ids, dtype=np.int64)
+        n_nodes = self._graphs[req.graph].profile.num_nodes
+        if ids.size and (ids.min() < 0 or ids.max() >= n_nodes):
+            raise IndexError(f"node ids out of range for graph "
+                             f"{req.graph!r} ({n_nodes} nodes)")
+        return (req.model, req.graph)
 
-    def flush(self) -> list[Prediction]:
-        """Serve all pending requests, micro-batched by (model, graph).
+    def step(self, key: tuple[str, str],
+             payloads: Sequence[NodeRequest]) -> list[Prediction]:
+        """Answer one formed micro-batch (all requests share ``key``'s
+        Executable). Results match ``payloads`` positionally."""
+        model, graph = key
+        exe = self.executable(model, graph)
+        # one cache touch per request: the batch's first touch may compute
+        # the full-graph softmax, the rest count as hits
+        miss = 0 if exe.has_cached_probs else 1
+        self._stats["logits_cache_misses"] += miss
+        self._stats["logits_cache_hits"] += len(payloads) - miss
+        id_batches = [np.asarray(r.node_ids, dtype=np.int64)
+                      for r in payloads]
+        out = []
+        for r, ids, (classes, probs, ms) in zip(payloads, id_batches,
+                                                exe.step(id_batches)):
+            out.append(Prediction(
+                graph=graph, model=model, node_ids=ids, classes=classes,
+                probs=probs, engine_ms=ms, latency_ms=ms))
+            self._stats["requests"] += 1
+            self._stats["nodes_served"] += int(ids.size)
+        self._stats["batches"] += 1
+        return out
 
-        The queue is cleared only on success: a rejected batch (unknown
-        name, bad node ids) leaves every request queued for the caller to
-        repair or drop."""
-        preds = self.serve(self._pending)
-        self._pending = []
-        return preds
+    # -- synchronous batch core --------------------------------------------
 
     def serve(self, requests: Sequence[NodeRequest]) -> list[Prediction]:
-        """Serve a batch; answers keep the caller's request order."""
+        """Serve a batch synchronously; answers keep the caller's request
+        order. (The async path is ``repro.serving.Server.submit`` — this
+        core micro-batches by (model, graph) without queueing.)"""
         # validate everything before touching caches/stats so a bad request
         # rejects the batch atomically instead of half-serving it
         groups: OrderedDict[tuple[str, str], list[int]] = OrderedDict()
         for i, r in enumerate(requests):
-            if r.model not in self._models:
-                raise KeyError(f"unknown model {r.model!r}")
-            if r.graph not in self._graphs:
-                raise KeyError(f"unknown graph {r.graph!r}")
-            ids = np.asarray(r.node_ids, dtype=np.int64)
-            n_nodes = self._graphs[r.graph].profile.num_nodes
-            if ids.size and (ids.min() < 0 or ids.max() >= n_nodes):
-                raise IndexError(f"node ids out of range for graph "
-                                 f"{r.graph!r} ({n_nodes} nodes)")
-            groups.setdefault((r.model, r.graph), []).append(i)
+            groups.setdefault(self.route(r), []).append(i)
 
         out: list[Prediction | None] = [None] * len(requests)
-        for (model, graph), idxs in groups.items():
-            t0 = time.perf_counter()
-            exe = self.executable(model, graph)
-            # one cache touch per request: the group's first touch may
-            # compute the full-graph softmax, the rest count as hits
-            for _ in idxs:
-                hit = exe.has_cached_probs
-                self._stats["logits_cache_hits" if hit
-                            else "logits_cache_misses"] += 1
-                probs = exe.full_probs()
-            ms = (time.perf_counter() - t0) * 1e3
-            self._stats["batches"] += 1
-            for i in idxs:
-                ids = np.asarray(requests[i].node_ids, dtype=np.int64)
-                p = probs[ids]
-                out[i] = Prediction(
-                    graph=graph, model=model, node_ids=ids,
-                    classes=np.argmax(p, axis=-1).astype(np.int32),
-                    probs=np.max(p, axis=-1).astype(np.float32),
-                    latency_ms=ms)
-                self._stats["requests"] += 1
-                self._stats["nodes_served"] += int(ids.size)
+        for key, idxs in groups.items():
+            preds = self.step(key, [requests[j] for j in idxs])
+            for i, pred in zip(idxs, preds):
+                out[i] = pred
         return out  # type: ignore[return-value]
+
+    # -- deprecated one-shot shim ------------------------------------------
+
+    def submit(self, req: NodeRequest) -> None:
+        """Deprecated: queue one request for the next ``flush()``."""
+        warnings.warn(
+            "GNNServeEngine.submit/flush are deprecated; submit through "
+            "repro.serving.Server for scheduled, ticketed serving",
+            DeprecationWarning, stacklevel=2)
+        self._pending.append(req)
+
+    def flush(self) -> list[Prediction]:
+        """Deprecated: serve all pending requests, micro-batched by
+        (model, graph).
+
+        The queue is cleared only on success: a rejected batch (unknown
+        name, bad node ids) leaves every request queued for the caller to
+        repair or drop."""
+        warnings.warn(
+            "GNNServeEngine.submit/flush are deprecated; submit through "
+            "repro.serving.Server for scheduled, ticketed serving",
+            DeprecationWarning, stacklevel=2)
+        preds = self.serve(self._pending)
+        self._pending = []
+        return preds
 
     def cache_report(self) -> str:
         s = self.stats
@@ -217,8 +270,10 @@ class GNNServeEngine:
         l_tot = s["logits_cache_hits"] + s["logits_cache_misses"]
         return (f"graph-tensor cache: {s['graph_cache_hits']}/{g_tot} hits "
                 f"({len(self._store)} resident, "
-                f"{s['graph_cache_evictions']} evicted) | "
+                f"{s['graph_cache_evictions']} evicted, "
+                f"{s['graph_built_ms_total']:.0f} ms building) | "
                 f"logits cache: {s['logits_cache_hits']}/{l_tot} hits | "
-                f"{s['compiles']} executables compiled | "
+                f"{s['compiles']} executables compiled "
+                f"({s['compile_ms_total']:.0f} ms) | "
                 f"{s['requests']} requests, {s['nodes_served']} nodes in "
                 f"{s['batches']} batches")

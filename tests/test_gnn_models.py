@@ -224,6 +224,26 @@ class TestGNNServing:
         assert eng.stats["logits_cache_misses"] == 2
         np.testing.assert_array_equal(preds2[0].classes, preds[0].classes)
 
+    def test_per_request_latency_attribution(self):
+        """Regression: a two-request (model, graph) group must NOT report
+        the whole group's wall time (compile included) for every request —
+        the cold full-graph forward is charged to the request that
+        triggered it, the second pays only its gather, and compile time
+        stays out of request latency entirely."""
+        eng, ds = self._engine(archs=("gcn",))
+        [p1, p2] = eng.serve([
+            NodeRequest("cora", np.array([0, 1]), model="gcn"),
+            NodeRequest("cora", np.array([2, 3]), model="gcn")])
+        assert p1.engine_ms > 0 and p2.engine_ms > 0
+        # the full-graph forward dominates a pure gather by orders of
+        # magnitude; identical values would mean group-wall misattribution
+        assert p2.engine_ms < p1.engine_ms
+        # no queueing in the sync path; latency_ms = queue_ms + engine_ms
+        assert p1.queue_ms == 0.0 and p2.queue_ms == 0.0
+        assert p1.latency_ms == pytest.approx(p1.engine_ms)
+        # compile time accrues to engine stats, not to any request
+        assert eng.stats["compile_ms_total"] > 0
+
     def test_graph_cache_shared_by_signature(self):
         """gat and sage_max both need ('sum', self-loops) GraphTensors:
         one build serves both (GNNIE-style graph-specific caching)."""

@@ -148,6 +148,47 @@ class TestCompile:
         assert plan == exe.plan
 
 
+class TestGraphStoreEviction:
+    def test_executable_serves_after_lru_eviction_and_rebuilds_on_miss(self):
+        """Eviction-under-use: an Executable owns its GraphTensors, so LRU
+        eviction of its store entry must not break serving; the next
+        compile for that graph rebuilds on miss, visibly (built_ms_total
+        counts rebuild churn)."""
+        store = runtime.GraphStore(max_entries=1)
+        ds_a = make_dataset("cora", seed=0, scale=0.05)
+        ds_b = make_dataset("citeseer", seed=0, scale=0.05)
+        kw = dict(backend="reference", max_shard_n=64, store=store, seed=0)
+        spec_a = _spec("gcn", ds_a.profile)
+        exe_a = runtime.compile(spec_a, ds_a, graph_key="a", **kw)
+        ref = np.asarray(exe_a.forward())
+        built_after_a = store.stats["built_ms_total"]
+        assert built_after_a > 0
+
+        # compiling for graph b evicts a's (sole-capacity) store entry
+        runtime.compile(_spec("gcn", ds_b.profile), ds_b, graph_key="b",
+                        **kw)
+        assert store.stats["evictions"] == 1
+        assert store.stats["built_ms_total"] > built_after_a
+
+        # the evicted Executable keeps serving correctly, including a
+        # full recompute of its cached softmax after invalidation
+        classes, _ = exe_a.predict(np.array([0, 1, 2]))
+        np.testing.assert_array_equal(classes,
+                                      np.argmax(ref[:3], axis=-1))
+        exe_a.invalidate()
+        np.testing.assert_allclose(np.asarray(exe_a.forward()), ref,
+                                   atol=1e-6, rtol=1e-6)
+
+        # rebuild-on-miss: a fresh compile for graph a cannot hit
+        misses0 = store.stats["misses"]
+        built0 = store.stats["built_ms_total"]
+        exe_a2 = runtime.compile(spec_a, ds_a, graph_key="a", **kw)
+        assert store.stats["misses"] == misses0 + 1
+        assert store.stats["built_ms_total"] > built0
+        np.testing.assert_allclose(np.asarray(exe_a2.forward()), ref,
+                                   atol=1e-5, rtol=1e-5)
+
+
 class TestBackendParity:
     """Acceptance: compile(..., backend="reference") produces logits
     allclose to backend="pallas" for every zoo arch on the Table-II
