@@ -45,6 +45,13 @@ class GraphTensors:
             S=sg.S,
         )
 
+    @property
+    def occupancy(self):
+        """(S, S) edge count per shard (numpy) — lets graphs/partition.py
+        plan over cached GraphTensors exactly like a ShardedGraph."""
+        import numpy as np
+        return np.asarray(self.edge_valid.sum(axis=-1))
+
     def group(self, h: jax.Array) -> jax.Array:
         """(N, D) node features -> (S, n, D) shard-grouped (zero padded)."""
         d = h.shape[-1]

@@ -1,0 +1,141 @@
+"""Collective-traffic accounting over compiled HLO text.
+
+``analyze_collectives`` scans ``compiled.as_text()`` for collective
+instructions and reports, per op kind:
+
+  * ``operand_bytes`` — the instruction's result-type bytes (for a
+    multi-operand fused all-reduce the tuple members are summed),
+  * ``wire_bytes``    — estimated bytes on the interconnect per
+    instruction, using the standard ring-algorithm costs with ``g`` the
+    replica-group size:
+
+        all-reduce          2·(g-1)/g · B      (reduce-scatter + all-gather)
+        reduce-scatter        (g-1)/g · B
+        all-gather            (g-1)   · B      (B = gathered result; this
+                                                equals the total bytes all
+                                                g participants put on the
+                                                wire)
+        all-to-all            (g-1)/g · B
+        collective-permute              B
+
+  * ``counts``        — instructions per op kind (``-start`` counted,
+    ``-done`` skipped, so async pairs count once).
+
+This is a text-level model — good enough to compare sharding strategies
+and to verify the sharded GNN executable's per-layer all-gathers; it does
+not claim wire-exact knowledge of XLA's chosen algorithms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "collective-broadcast")
+
+# one typed shape, e.g. bf16[8,128] (layout suffix {1,0} never matches)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# "= <type> <opcode>(" — type is a tuple "(...)" or a single token
+_INSTR_RE = re.compile(r"=\s*(\([^)]*\)|\S+)\s+([a-z][a-z0-9-]*)\(")
+# iota replica groups: [4,16]<=[64] => 4 groups of 16
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([0-9,]+)\]<=\[")
+# explicit replica groups: {{0,1,2,3},{4,5,6,7}} => groups of 4
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string; tuples sum their members, scalars
+    (``f32[]``) count one element."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(1).split(",")[-1])
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _wire_bytes(op: str, operand_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return operand_bytes * 2.0 * (g - 1) / g
+    if op == "reduce-scatter":
+        return operand_bytes * (g - 1) / g
+    if op == "all-gather":
+        return operand_bytes * float(g - 1)
+    if op == "all-to-all":
+        return operand_bytes * (g - 1) / g
+    return float(operand_bytes)  # collective-permute / broadcast
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-op-kind collective traffic parsed from one HLO module."""
+
+    operand_bytes: dict[str, float]
+    wire_bytes: dict[str, float]
+    counts: dict[str, int]
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def analyze_collectives(hlo_text: str) -> CollectiveStats:
+    """Scan HLO text for collective instructions (see module docstring)."""
+    operand: dict[str, float] = {}
+    wire: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if m is None:
+            continue
+        type_str, opcode = m.group(1), m.group(2)
+        if opcode.endswith("-done"):
+            continue  # counted at -start
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if base not in COLLECTIVE_OPS:
+            continue
+        if opcode.endswith("-start") and type_str.startswith("("):
+            # async form: the -start result is a tuple holding BOTH the
+            # operand and the produced value (plus tiny context tokens on
+            # some targets); summing it would double-count. Pick the
+            # member matching the sync convention (the collective's
+            # result): the largest, except reduce-scatter whose result is
+            # the smallest data member.
+            members = [type_bytes(m.group(0))
+                       for m in _SHAPE_RE.finditer(type_str)]
+            b = (min(members) if base == "reduce-scatter"
+                 else max(members)) if members else 0
+        else:
+            b = type_bytes(type_str)
+        g = _group_size(line)
+        operand[base] = operand.get(base, 0.0) + b
+        wire[base] = wire.get(base, 0.0) + _wire_bytes(base, b, g)
+        counts[base] = counts.get(base, 0) + 1
+    return CollectiveStats(operand_bytes=operand, wire_bytes=wire,
+                           counts=counts)

@@ -1,0 +1,143 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Every parameter / activation / cache tensor in this repo carries a tuple
+of *logical* axis names (see ``repro.nn.layers.Axes``). ``ShardingRules``
+turns one of those tuples plus a concrete shape into a
+``PartitionSpec``, applying three guards:
+
+  * **divisibility** — a dimension is only sharded when its size divides
+    the (combined) mesh-axis size; otherwise it falls back to the next
+    candidate, then to replicated (odd vocab sizes, 40-head models on a
+    16-way axis, batch=1 long-context shapes all stay correct).
+  * **axis reuse** — a mesh axis is used at most once per spec; the
+    first dimension that claims it wins (``(lru, lru)`` squares shard
+    one side only).
+  * **missing mesh axes** — rule entries naming axes the mesh doesn't
+    have are dropped, so the same table serves single-pod
+    ``("data", "model")`` and multi-pod ``("pod", "data", "model")``
+    meshes (batch shards over the combined ``("pod", "data")`` axis when
+    a pod axis exists, plain ``"data"`` when it doesn't).
+
+A rule value is a tuple of *candidates* tried in order; each candidate
+is one mesh-axis name or a tuple of names (sharded over the combined
+axis). ``()`` means never shard. ``override()`` returns a new rule set —
+the dry-run's ``--override logical=mesh1[+mesh2]`` flag parses into
+exactly this format.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Candidate tables: logical axis -> tuple of candidates (see module
+# docstring). Anything not listed is replicated.
+DEFAULT_RULES: dict[str, tuple] = {
+    # activations
+    "act_batch": (("pod", "data"),),
+    "act_seq": ("model",),
+    "act_embed": (),
+    # embeddings / output head
+    "embed": ("data",),
+    "embed_in": (),
+    "vocab": ("model",),
+    "codebooks": (),
+    # attention
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "kv_heads_n": ("model",),
+    "head_dim": (),
+    "cache_seq": (),
+    # MLP / MoE
+    "mlp": ("model",),
+    "experts": (),
+    "moe_cap": (),
+    "ef": ("model",),
+    # recurrent / SSM mixers
+    "lru": ("model",),
+    "lru_gate": ("model",),
+    "conv_w": (),
+    "ssm_in": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_conv": ("model",),
+    "ssm_heads": ("model",),
+    "ssm_p": (),
+    "ssm_state": (),
+    # misc input axes / scan-stacked layer axis
+    "mrope3": (),
+    "layers": (),
+}
+
+
+def _normalize_rule(value) -> tuple:
+    """Accept a bare axis name, a candidate tuple, or () (= unsharded)."""
+    if isinstance(value, str):
+        return (value,)
+    return tuple(value)
+
+
+class ShardingRules:
+    """Sharding-rule table bound to one mesh (concrete or abstract)."""
+
+    def __init__(self, mesh, rules: dict[str, tuple] | None = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES) if rules is None else rules
+        # works for Mesh and AbstractMesh on every supported jax version
+        self._axis_sizes = dict(mesh.shape)
+
+    def override(self, **overrides) -> "ShardingRules":
+        """New rules with the given logical axes remapped (``()`` ->
+        replicated, ``"model"`` / ``("pod", "data")`` / candidate tuples
+        as in the table)."""
+        new = dict(self.rules)
+        for name, value in overrides.items():
+            new[name] = _normalize_rule(value)
+        return ShardingRules(self.mesh, new)
+
+    # -- spec construction -------------------------------------------------
+
+    def spec(self, shape: tuple[int, ...], axes) -> P:
+        """PartitionSpec for one tensor: shape + logical axis names."""
+        names = tuple(axes)
+        if len(names) != len(shape):
+            raise ValueError(f"rank mismatch: shape {shape} vs axes {names}")
+        entries: list = []
+        used: set[str] = set()
+        for dim, name in zip(shape, names):
+            entry = None
+            for cand in map(_normalize_rule, self.rules.get(name, ())):
+                mesh_axes = tuple(a for a in cand if a in self._axis_sizes)
+                if not mesh_axes or any(a in used for a in mesh_axes):
+                    continue
+                total = math.prod(self._axis_sizes[a] for a in mesh_axes)
+                if total <= 1 or dim % total != 0:
+                    continue
+                entry = mesh_axes[0] if len(mesh_axes) == 1 else mesh_axes
+                used.update(mesh_axes)
+                break
+            entries.append(entry)
+        return P(*entries)
+
+    def sharding(self, shape: tuple[int, ...], axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, axes))
+
+    # -- pytree variants ---------------------------------------------------
+
+    def tree_specs(self, tree, axes_tree):
+        """Map a pytree of avals/arrays + a matching logical-axes tree
+        (``Axes`` leaves) to a pytree of PartitionSpecs."""
+        return jax.tree.map(lambda x, ax: self.spec(x.shape, ax),
+                            tree, axes_tree)
+
+    def tree_shardings(self, tree, axes_tree):
+        return jax.tree.map(lambda x, ax: self.sharding(x.shape, ax),
+                            tree, axes_tree)
+
+    # -- activation constraint (the Constrain protocol of models/lm.py) ---
+
+    def constrain(self, x, axes):
+        """``with_sharding_constraint`` for one activation (used inside
+        jit; a no-op spec is still a valid constraint)."""
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding(x.shape, axes))

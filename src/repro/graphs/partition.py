@@ -7,6 +7,10 @@ the FEATURE axis rides ``model`` — the distributed generalization of
 dimension-blocking (intra-node parallelism). The plan below computes which
 source-shard features each data group must receive per step: exactly the
 paper's Table-I traffic, with DRAM reads become cross-device transfers.
+
+``dist/gnn.py`` executes exactly this decomposition under ``shard_map``
+(``pad=True`` gives the equal row groups the SPMD program needs) and
+verifies its measured all-gather volume against the plan's models.
 """
 from __future__ import annotations
 
@@ -14,16 +18,17 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.sharding import ShardedGraph
-
 
 @dataclasses.dataclass(frozen=True)
 class PartitionPlan:
     n_data: int                 # data-axis size
-    rows_per_group: int         # dst shard rows per data group
+    rows_per_group: int         # max dst shard rows any data group owns
     # comm_matrix[g_dst, g_src] = edges whose sources live on g_src and
     # destinations on g_dst (off-diagonal = cross-group transfers)
     comm_matrix: np.ndarray
+    # dst shard rows actually owned per group (balanced split: sizes
+    # differ by at most one; an equal padded split may trail smaller)
+    group_sizes: tuple[int, ...] = ()
 
     @property
     def cross_group_edge_frac(self) -> float:
@@ -34,28 +39,71 @@ class PartitionPlan:
 
     def transfer_bytes_per_layer(self, feature_dim: int,
                                  dtype_bytes: int = 2) -> float:
-        """Upper bound: every cross-group edge pulls one source feature
-        row (dedup within a group is shard-level, handled on-device)."""
+        """Per-edge pull model: every cross-group edge pulls one source
+        feature row (dedup within a group is shard-level, handled
+        on-device). An upper bound for an edge-driven fetch schedule."""
         off = self.comm_matrix.sum() - np.trace(self.comm_matrix)
         return float(off) * feature_dim * dtype_bytes
 
-
-def partition_graph(sg: ShardedGraph, n_data: int) -> PartitionPlan:
-    """Assign dst-shard rows round-robin-contiguously to data groups and
-    build the inter-group communication matrix."""
-    rows_per_group = -(-sg.S // n_data)
-    occ = sg.occupancy  # (S, S) edges per (dst, src) shard
-    comm = np.zeros((n_data, n_data), dtype=np.float64)
-    for i in range(sg.S):
-        gi = min(i // rows_per_group, n_data - 1)
-        for j in range(sg.S):
-            gj = min(j // rows_per_group, n_data - 1)
-            comm[gi, gj] += occ[i, j]
-    return PartitionPlan(n_data, rows_per_group, comm)
+    def allgather_bytes_per_layer(self, feature_dim: int, shard_n: int,
+                                  dtype_bytes: int = 2) -> float:
+        """Broadcast (all-gather) model: what the shard_map executable in
+        dist/gnn.py actually moves per layer — every group broadcasts its
+        ``rows_per_group`` padded rows to every other group, so total wire
+        bytes are ``(n_data - 1) · n_data · rows_per_group · shard_n ·
+        feature_dim`` (padded rows included: the SPMD program ships
+        them)."""
+        total_rows = self.n_data * self.rows_per_group
+        return float((self.n_data - 1) * total_rows * shard_n
+                     * feature_dim * dtype_bytes)
 
 
-def balance_report(sg: ShardedGraph, n_data: int) -> dict:
-    """Load balance: edges per data group (the straggler predictor)."""
+def partition_graph(sg, n_data: int, *, pad: bool = False) -> PartitionPlan:
+    """Assign contiguous dst-shard row ranges to data groups and build the
+    inter-group communication matrix.
+
+    ``sg`` is anything with ``.S`` (grid width) and ``.occupancy`` ((S, S)
+    edges per (dst, src) shard): a ``core.sharding.ShardedGraph`` or a
+    ``core.engines.GraphTensors``.
+
+    ``pad=False`` (default) splits the S rows balanced-contiguously
+    (``np.array_split`` semantics: sizes differ by at most one, no group
+    is left empty while another holds two extra — the old ceil-division
+    assignment produced empty trailing groups, e.g. S=4, n_data=3 gave
+    (2, 2, 0)). ``pad=True`` splits ceil(S / n_data) rows to every group
+    as if the grid were zero-padded to a multiple of n_data — the equal
+    split the shard_map executable needs (trailing groups own fewer real
+    rows).
+    """
+    S = int(sg.S)
+    occ = np.asarray(sg.occupancy, dtype=np.float64)
+    if pad:
+        rows_per_group = -(-S // n_data)
+        group_of = np.minimum(np.arange(S) // rows_per_group, n_data - 1)
+    else:
+        splits = np.array_split(np.arange(S), n_data)
+        group_of = np.empty(S, dtype=np.int64)
+        for g, rows in enumerate(splits):
+            group_of[rows] = g
+        rows_per_group = max((len(rows) for rows in splits), default=0)
+    sizes = np.bincount(group_of, minlength=n_data) if S else \
+        np.zeros(n_data, dtype=np.int64)
+    # comm = G · occ · Gᵀ with G the (n_data, S) group-indicator matrix —
+    # one matmul pair instead of the former O(S²) Python double loop
+    ind = np.zeros((n_data, S), dtype=np.float64)
+    if S:
+        ind[group_of, np.arange(S)] = 1.0
+    comm = ind @ occ @ ind.T
+    return PartitionPlan(n_data, int(rows_per_group), comm,
+                         group_sizes=tuple(int(s) for s in sizes))
+
+
+def balance_report(sg, n_data: int) -> dict:
+    """Load balance: edges per data group (the straggler predictor).
+
+    Uses the balanced (array_split) assignment, so the mean is taken over
+    groups that actually own rows — no empty trailing groups diluting the
+    imbalance ratio."""
     plan = partition_graph(sg, n_data)
     per_group = plan.comm_matrix.sum(axis=1)
     return {
@@ -63,4 +111,5 @@ def balance_report(sg: ShardedGraph, n_data: int) -> dict:
         "edges_per_group_max": float(per_group.max()),
         "imbalance": float(per_group.max() / max(per_group.mean(), 1.0)),
         "cross_group_edge_frac": plan.cross_group_edge_frac,
+        "group_sizes": plan.group_sizes,
     }

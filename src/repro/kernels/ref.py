@@ -37,9 +37,11 @@ def dense_engine(x, w, b=None, *, activation: str = "none"):
 def shard_spmm(blocks, h):
     """Graph Engine (linear aggregation) oracle.
 
-    blocks: (S, S, n, n) densified per-shard adjacency, A[i, j, v, u].
-    h:      (S, n, D) node features grouped by shard.
-    returns (S, n, D): out[i, v] = sum_{j,u} A[i,j,v,u] * h[j,u].
+    blocks: (S_dst, S_src, n, n) densified per-shard adjacency,
+            A[i, j, v, u] (rectangular grids welcome — dist/gnn.py
+            aggregates local dst rows against the full source grid).
+    h:      (S_src, n, D) node features grouped by shard.
+    returns (S_dst, n, D): out[i, v] = sum_{j,u} A[i,j,v,u] * h[j,u].
     """
     return jnp.einsum(
         "ijvu,jud->ivd",

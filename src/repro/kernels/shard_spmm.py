@@ -54,18 +54,20 @@ def shard_spmm(
 ) -> jax.Array:
     """out[i] = sum_j A[i, j] @ h[j], feature-blocked.
 
-    blocks: (S, S, n, n) densified adjacency; h: (S, n, D) shard-grouped
-    node features; D must be divisible by block_b (ops.py pads).
-    Returns (S, n, D).
+    blocks: (S_dst, S_src, n, n) densified adjacency; h: (S_src, n, D)
+    shard-grouped node features; D must be divisible by block_b (ops.py
+    pads). Returns (S_dst, n, D). The grid may be rectangular — the
+    sharded executable (dist/gnn.py) hands each data-group its own
+    contiguous dst rows against the full gathered source grid.
     """
-    s, s2, n, n2 = blocks.shape
+    s, s_src, n, n2 = blocks.shape
     s3, n3, d = h.shape
-    assert s == s2 == s3 and n == n2 == n3, (blocks.shape, h.shape)
+    assert s_src == s3 and n == n2 == n3, (blocks.shape, h.shape)
     assert d % block_b == 0, (d, block_b)
-    grid = (d // block_b, s, s)  # (blockD, dst, src) — Algorithm 1
+    grid = (d // block_b, s, s_src)  # (blockD, dst, src) — Algorithm 1
 
     return pl.pallas_call(
-        functools.partial(_kernel, ns=s),
+        functools.partial(_kernel, ns=s_src),
         grid=grid,
         in_specs=[
             # adjacency block for (dst=i, src=j); dims 0,1 squeezed

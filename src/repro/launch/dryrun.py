@@ -130,6 +130,8 @@ def _compile_once(fn, avals, shardings, donate, mesh):
         t2 = time.time()
         ma = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # jax 0.4.x: list of dicts
+            ca = ca[0] if ca else {}
         hlo = compiled.as_text()
     colls = analyze_collectives(hlo)
     return {

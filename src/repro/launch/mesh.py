@@ -10,23 +10,26 @@ the leading "pod" axis crosses DCN. Designed so the same logical sharding
 rules scale to N pods by growing the leading axis (elastic scaling: see
 dist/shardings.py — batch shards over ("pod","data") and re-lowers for any
 pod count without code changes).
+
+``make_mesh_for`` is the elastic variant the GNN runtime uses:
+``runtime.compile(spec, graph, mesh=make_mesh_for(jax.device_count()))``
+returns a sharded Executable (see dist/gnn.py). Mesh construction goes
+through dist/compat.py so both jax 0.4.x and >= 0.5 work.
 """
 from __future__ import annotations
 
-import jax
+from repro.dist.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for(devices: int, *, model_parallel: int = 16):
     """Elastic variant: build a (data, model) mesh for whatever device
     count the scheduler hands us (node failures / scale-up)."""
     assert devices % model_parallel == 0, (devices, model_parallel)
-    return jax.make_mesh(
-        (devices // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((devices // model_parallel, model_parallel),
+                     ("data", "model"))

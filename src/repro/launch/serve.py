@@ -16,6 +16,12 @@ GNN node classification (repro.gnn zoo + GNNServeEngine)::
 
     PYTHONPATH=src python -m repro.launch.serve --mode gnn \
         --graphs cora,citeseer --models gcn,gat --num-requests 64
+
+Multi-device GNN serving (sharded Executables via repro.dist.gnn)::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --mode gnn --mesh 8 \
+        --model-parallel 2 --graphs cora --models gcn --backend reference
 """
 from __future__ import annotations
 
@@ -129,7 +135,30 @@ def _serve_gnn(args) -> None:
 
     from repro.graphs.datasets import DATASETS
 
-    engine = GNNServeEngine(max_shard_n=args.shard_n, backend=args.backend)
+    mesh = None
+    if args.mesh:
+        import jax
+
+        from repro.dist.gnn import SUPPORTED_ARCHS
+        from repro.launch.mesh import make_mesh_for
+
+        if jax.device_count() < args.mesh:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {args.mesh} devices but jax "
+                f"sees {jax.device_count()}; on CPU export XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.mesh}")
+        bad = [m for m in models if m not in SUPPORTED_ARCHS]
+        if bad:
+            raise SystemExit(
+                f"--mesh serving supports {SUPPORTED_ARCHS}; drop {bad} "
+                f"from --models")
+        mesh = make_mesh_for(args.mesh, model_parallel=args.model_parallel)
+        print(f"mesh: {args.mesh} devices as "
+              f"data={args.mesh // args.model_parallel} x "
+              f"model={args.model_parallel} (sharded Executables)")
+
+    engine = GNNServeEngine(max_shard_n=args.shard_n, backend=args.backend,
+                            mesh=mesh)
     datasets = {}
     for g in graphs:
         # pre-check against the engine's densification limit BEFORE paying
@@ -214,6 +243,14 @@ def main() -> None:
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--hidden", type=int, default=16)
     ap.add_argument("--heads", type=int, default=2)
+    ap.add_argument("--mesh", type=int, default=0, metavar="DEVICES",
+                    help="serve from sharded Executables on a (data, "
+                         "model) mesh over this many devices (0 = single "
+                         "device; on CPU export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first)")
+    ap.add_argument("--model-parallel", type=int, default=2,
+                    help="model-axis size of the --mesh (data axis = "
+                         "devices / model_parallel)")
     ap.add_argument("--shard-n", type=int, default=512)
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--nodes-per-req", type=int, default=8)

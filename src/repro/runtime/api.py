@@ -70,6 +70,7 @@ def compile(spec: ZooSpec, graph, *,
             block_candidates: tuple[int, ...] | None = None,
             store: GraphStore | None = None,
             graph_key=None,
+            mesh=None,
             donate_features: bool = False,
             plan_cache_dir=None) -> Executable:
     """Plan, shard, initialize and jit one zoo model for one graph.
@@ -79,6 +80,11 @@ def compile(spec: ZooSpec, graph, *,
       graph: a :class:`~repro.graphs.datasets.GraphData` or an
         ``(edges, num_nodes[, features])`` tuple.
       platform: the performance-model platform the planner optimizes for.
+      mesh: a ``(data, model)`` jax mesh (``launch.mesh.make_mesh_for``);
+        when given the returned Executable is a
+        :class:`repro.dist.gnn.ShardedExecutable` whose forward runs
+        under ``shard_map`` — data axis = contiguous dst-shard row
+        groups, model axis = feature blocks.
       backend: kernel backend name/object; None resolves from the
         ``REPRO_KERNEL_BACKEND`` env var (default ``pallas``) and is then
         *pinned* into the Executable.
@@ -126,6 +132,10 @@ def compile(spec: ZooSpec, graph, *,
     if params is None:
         params = init_zoo(jax.random.key(seed), spec)
 
-    return Executable(spec=spec, plan=plan, backend=be, gt=entry.gt,
-                      h_grouped=entry.h_grouped, params=params,
-                      graph_key=graph_key, donate_features=donate_features)
+    kw = dict(spec=spec, plan=plan, backend=be, gt=entry.gt,
+              h_grouped=entry.h_grouped, params=params,
+              graph_key=graph_key, donate_features=donate_features)
+    if mesh is not None:
+        from repro.dist.gnn import ShardedExecutable
+        return ShardedExecutable(mesh=mesh, **kw)
+    return Executable(**kw)

@@ -67,7 +67,11 @@ def _unflatten_params(flat: dict):
         if not isinstance(node, dict):
             return node
         if node and all(k.isdigit() for k in node):
-            return [listify(node[str(i)]) for i in range(len(node))]
+            # index-robust: a pruned/partial checkpoint may hold
+            # non-contiguous digit keys ("0", "2"); rebuild the list from
+            # the keys actually present, in numeric order, instead of
+            # assuming 0..len-1 (which KeyError'd on any gap)
+            return [listify(node[k]) for k in sorted(node, key=int)]
         return {k: listify(v) for k, v in node.items()}
 
     return listify(root)
@@ -89,16 +93,25 @@ class Executable:
         self._h_grouped = h_grouped
         self._probs: np.ndarray | None = None
 
-        def fwd(p, h):
-            return _fwd.forward(spec, p, gt, h, plans=plan.layers,
-                                backend=backend)
-
+        fwd = self._forward_fn()
         self._jit_forward = jax.jit(fwd)
         # the donated variant consumes the caller's fresh feature buffer so
         # XLA can reuse it for layer intermediates; only sound for features
         # passed per call (the cached buffer must survive repeat calls)
         self._jit_forward_donate = (
             jax.jit(fwd, donate_argnums=(1,)) if donate_features else None)
+
+    def _forward_fn(self):
+        """(params, h_grouped) -> (N, C) logits — the function jitted at
+        construction. Subclasses (dist.gnn.ShardedExecutable) override
+        this to run the same plan under shard_map."""
+        spec, plan, backend, gt = self.spec, self.plan, self.backend, self.gt
+
+        def fwd(p, h):
+            return _fwd.forward(spec, p, gt, h, plans=plan.layers,
+                                backend=backend)
+
+        return fwd
 
     # -- forward entry points ---------------------------------------------
 
@@ -125,9 +138,23 @@ class Executable:
             return self._jit_forward_donate(p, h)
         return self._jit_forward(p, h)
 
+    def _check_node_ids(self, node_ids) -> np.ndarray:
+        """Validate ids against the compiled graph. Negative ids would
+        silently wrap around (numpy/jnp indexing) and return the *wrong
+        node's* prediction; ids >= N would clamp or wrap — both are data
+        corruption, not errors, unless caught here."""
+        ids = np.asarray(node_ids, dtype=np.int64)
+        if ids.size:
+            lo, hi = int(ids.min()), int(ids.max())
+            if lo < 0 or hi >= self.gt.num_nodes:
+                raise ValueError(
+                    f"node ids must be in [0, {self.gt.num_nodes}); got "
+                    f"range [{lo}, {hi}]")
+        return ids
+
     def forward_nodes(self, node_ids, params: dict | None = None) -> jax.Array:
         """Node-batch logits (k, num_classes) for ``node_ids``."""
-        ids = jnp.asarray(node_ids)
+        ids = jnp.asarray(self._check_node_ids(node_ids))
         return self.forward(params)[ids]
 
     def full_probs(self) -> np.ndarray:
@@ -142,7 +169,7 @@ class Executable:
     def predict(self, node_ids) -> tuple[np.ndarray, np.ndarray]:
         """(classes, probs) for a node batch, served from the cached
         full-graph softmax."""
-        p = self.full_probs()[np.asarray(node_ids, dtype=np.int64)]
+        p = self.full_probs()[self._check_node_ids(node_ids)]
         return (np.argmax(p, axis=-1).astype(np.int32),
                 np.max(p, axis=-1).astype(np.float32))
 

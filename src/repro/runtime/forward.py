@@ -37,6 +37,13 @@ def build_graph_tensors(edges: np.ndarray, num_nodes: int, n: int,
     return GraphTensors.from_sharded(sg)
 
 
+def layer_activation(spec: ZooSpec, i: int) -> str:
+    """Activation for layer i: relu between layers, logits at the end.
+    Shared with the sharded forward (dist/gnn.py) so the two execution
+    paths can never disagree on where nonlinearities sit."""
+    return "relu" if i < len(spec.layer_dims) - 1 else "none"
+
+
 def _controller(plan, backend: KernelBackend | None) -> GNNeratorController:
     b = plan.B if plan is not None else 128
     fused = plan.fused if plan is not None else True
@@ -98,11 +105,10 @@ def forward(spec: ZooSpec, params: dict, gt: GraphTensors,
     where legal, B=128). ``backend=None`` resolves per call from the
     kernel registry (env-var selectable).
     """
-    n_layers = len(spec.layer_dims)
     for i, layer in enumerate(params["layers"]):
         plan = plans[i] if plans is not None else None
         ctrl = _controller(plan, backend)
-        act = "relu" if i < n_layers - 1 else "none"
+        act = layer_activation(spec, i)
         if spec.arch == "gcn":
             h = ctrl.graph_first(gt, h, layer["w"], activation=act)
         elif spec.arch == "sage_mean":

@@ -22,7 +22,9 @@ Any engine that implements the two-method step protocol plugs in:
             Raise to reject.'''
         def step(self, key, payloads: Sequence) -> Sequence:
             '''Run one formed micro-batch; results match payloads
-            positionally.'''
+            positionally. An Exception instance in the result list fails
+            that request alone (typed Failed); raising fails the whole
+            batch.'''
 
 Batch formation, priority/EDF ordering, bounded admission and the
 starvation guard live in :mod:`repro.serving.scheduler`; this module owns
@@ -231,6 +233,12 @@ class Server:
         batch_ms = (time.perf_counter() - t0) * 1e3
         with self._cv:
             for e, r in zip(entries, results):
+                if isinstance(r, Exception):
+                    # engines may fail a single request positionally (e.g.
+                    # a stale node id) without poisoning its co-batch
+                    self._m["failed"] += 1
+                    e.ticket._resolve(Failed(f"{type(r).__name__}: {r}"))
+                    continue
                 queue_ms = (dispatch_s - e.arrival_s) * 1e3
                 # engines that time each request (GNN Predictions) report
                 # per-request engine_ms; otherwise charge the batch wall

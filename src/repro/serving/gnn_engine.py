@@ -37,6 +37,11 @@ synchronous batch core the shim and the Server path share.
 Layer execution plans come from the content-hash-memoized planner inside
 ``runtime.compile`` — block size B, traversal order and fused/two-stage
 per layer from the Table-I cost model, shard size from the on-chip budget.
+
+Passing ``mesh=`` (a ``(data, model)`` jax mesh from
+``launch.mesh.make_mesh_for``) makes every compiled unit a sharded
+:class:`repro.dist.gnn.ShardedExecutable`: same serving protocol, forward
+computed across the mesh (``launch/serve.py --mesh N`` wires this up).
 """
 from __future__ import annotations
 
@@ -86,10 +91,13 @@ class GNNServeEngine:
 
     def __init__(self, *, max_graph_entries: int = 8,
                  max_shard_n: int = 1024, max_dense_gib: float = 8.0,
-                 backend: str | None = None):
+                 backend: str | None = None, mesh=None):
         self._graphs: dict[str, GraphData] = {}
         self._models: dict[str, _ModelEntry] = {}
         self._store = runtime.GraphStore(max_entries=max_graph_entries)
+        # a (data, model) jax mesh: compiled units become sharded
+        # Executables (repro.dist.gnn) serving from every device
+        self.mesh = mesh
         # compiled (model, graph) units; each owns the full-graph softmax
         # that warm requests gather from
         self._executables: dict[tuple[str, str], runtime.Executable] = {}
@@ -168,7 +176,7 @@ class GNNServeEngine:
             exe = runtime.compile(
                 ent.spec, self._graphs[graph], params=ent.params,
                 backend=self.backend, max_shard_n=self.max_shard_n,
-                store=self._store, graph_key=graph)
+                store=self._store, graph_key=graph, mesh=self.mesh)
             self._executables[key] = exe
             self._stats["compiles"] += 1
             self._stats["compile_ms_total"] += \
@@ -197,9 +205,13 @@ class GNNServeEngine:
         return (req.model, req.graph)
 
     def step(self, key: tuple[str, str],
-             payloads: Sequence[NodeRequest]) -> list[Prediction]:
+             payloads: Sequence[NodeRequest]) -> list:
         """Answer one formed micro-batch (all requests share ``key``'s
-        Executable). Results match ``payloads`` positionally."""
+        Executable). Results match ``payloads`` positionally; a request
+        whose node ids went stale between admission and dispatch (graph
+        re-registered smaller) yields its ValueError positionally so the
+        Server fails THAT ticket alone — co-batched valid requests still
+        complete."""
         model, graph = key
         exe = self.executable(model, graph)
         # one cache touch per request: the batch's first touch may compute
@@ -207,11 +219,21 @@ class GNNServeEngine:
         miss = 0 if exe.has_cached_probs else 1
         self._stats["logits_cache_misses"] += miss
         self._stats["logits_cache_hits"] += len(payloads) - miss
-        id_batches = [np.asarray(r.node_ids, dtype=np.int64)
-                      for r in payloads]
-        out = []
-        for r, ids, (classes, probs, ms) in zip(payloads, id_batches,
-                                                exe.step(id_batches)):
+        checked: list[np.ndarray | Exception] = []
+        for r in payloads:
+            try:
+                checked.append(exe._check_node_ids(r.node_ids))
+            except ValueError as err:
+                checked.append(err)
+        id_batches = [ids for ids in checked
+                      if not isinstance(ids, Exception)]
+        answers = iter(exe.step(id_batches))
+        out: list = []
+        for ids in checked:
+            if isinstance(ids, Exception):
+                out.append(ids)
+                continue
+            classes, probs, ms = next(answers)
             out.append(Prediction(
                 graph=graph, model=model, node_ids=ids, classes=classes,
                 probs=probs, engine_ms=ms, latency_ms=ms))

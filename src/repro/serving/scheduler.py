@@ -78,6 +78,11 @@ class MicroBatchScheduler:
     def __init__(self, config: SchedulerConfig | None = None):
         self.config = config or SchedulerConfig()
         self._queues: dict[Hashable, list[tuple[tuple, QueueEntry]]] = {}
+        # per-stream oldest arrival, maintained incrementally: push takes a
+        # min, removals (dispatch / expiry) recompute once over what's
+        # left. next_batch() reads it O(streams) instead of re-scanning
+        # every queued entry (O(depth) per stream) on every tick.
+        self._oldest: dict[Hashable, float] = {}
         self._seq = itertools.count()
         self._queued_deadlines = 0     # lets deadline-free sweeps short-circuit
         self.stats = {"admitted": 0, "rejected": 0, "expired": 0,
@@ -101,6 +106,9 @@ class MicroBatchScheduler:
             return False
         entry.seq = next(self._seq)
         heapq.heappush(q, (entry.sort_key(), entry))
+        cur = self._oldest.get(key)
+        self._oldest[key] = entry.arrival_s if cur is None \
+            else min(cur, entry.arrival_s)
         if entry.deadline_s is not None:
             self._queued_deadlines += 1
         self.stats["admitted"] += 1
@@ -126,16 +134,18 @@ class MicroBatchScheduler:
                 heapq.heapify(live)
                 if live:
                     self._queues[key] = live
+                    self._oldest[key] = min(e.arrival_s for _, e in live)
                 else:
                     del self._queues[key]
+                    self._oldest.pop(key, None)
         self._queued_deadlines -= len(expired)
         self.stats["expired"] += len(expired)
         return expired
 
     # -- formation ---------------------------------------------------------
 
-    def _head_wait_ms(self, q: list, now: float) -> float:
-        return (now - min(e.arrival_s for _, e in q)) * 1e3
+    def _head_wait_ms(self, key: Hashable, now: float) -> float:
+        return (now - self._oldest[key]) * 1e3
 
     def next_batch(self, now: float, *, force: bool = False
                    ) -> tuple[Hashable, list[QueueEntry]] | None:
@@ -145,7 +155,7 @@ class MicroBatchScheduler:
         (drain semantics).
         """
         cfg = self.config
-        waits = {key: self._head_wait_ms(q, now)  # one scan per stream
+        waits = {key: self._head_wait_ms(key, now)  # O(1) per stream
                  for key, q in self._queues.items() if q}
         ready = [key for key, q in self._queues.items() if q
                  and (force or len(q) >= cfg.max_batch_size
@@ -162,6 +172,9 @@ class MicroBatchScheduler:
                  for _ in range(min(cfg.max_batch_size, len(q)))]
         if not q:
             del self._queues[key]
+            del self._oldest[key]
+        else:
+            self._oldest[key] = min(e.arrival_s for _, e in q)
         self._queued_deadlines -= sum(e.deadline_s is not None
                                       for e in batch)
         self.stats["batches"] += 1

@@ -4,11 +4,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-try:
-    from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
-except ImportError:  # jax < 0.5 has no AxisType
-    pytest.skip("jax.sharding.AxisType unavailable (jax too old)",
-                allow_module_level=True)
+from jax.sharding import PartitionSpec as P
 
 import importlib.util
 
@@ -17,13 +13,21 @@ if importlib.util.find_spec("repro.dist") is None:
     # inside an existing repro.dist must still fail loudly
     pytest.skip("repro.dist not present in this build",
                 allow_module_level=True)
+from repro.dist import compat
+
+if compat.AbstractMesh is None:
+    # pre-AbstractMesh jax: keep the old graceful module-level skip
+    pytest.skip("jax too old for AbstractMesh", allow_module_level=True)
+abstract_mesh = compat.abstract_mesh
 from repro.dist.hlo_analysis import analyze_collectives, type_bytes
 from repro.dist.shardings import ShardingRules
 from repro.nn.layers import Axes
 
 
 def _mesh(shape=(16, 16), axes=("data", "model")):
-    return AbstractMesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    # dist.compat builds the AbstractMesh on both jax 0.4.x (no AxisType)
+    # and jax >= 0.5 (axis_types required by newer constructors)
+    return abstract_mesh(shape, axes)
 
 
 class TestShardingRules:
@@ -107,6 +111,23 @@ ENTRY %main {
             ar_bytes * 2 * 7 / 8)
         assert stats.wire_bytes["all-gather"] == pytest.approx(ag_bytes * 15)
         assert stats.counts == {"all-reduce": 1, "all-gather": 1}
+
+    def test_async_start_done_pairs_count_once(self):
+        """-start results are (operand, result) tuples; the pair must
+        count one collective with the sync convention's result bytes."""
+        hlo = """
+ENTRY %main {
+  %p0 = bf16[16,512]{1,0} parameter(0)
+  %ags = (bf16[4,512]{1,0}, bf16[16,512]{1,0}) all-gather-start(%p0), replica_groups=[2,4]<=[8], dimensions={0}
+  %agd = bf16[16,512]{1,0} all-gather-done(%ags)
+}
+"""
+        stats = analyze_collectives(hlo)
+        result_bytes = 16 * 512 * 2
+        assert stats.counts == {"all-gather": 1}
+        assert stats.operand_bytes["all-gather"] == result_bytes
+        assert stats.wire_bytes["all-gather"] == pytest.approx(
+            result_bytes * 3)
 
     def test_real_compiled_module(self):
         """Single-device module: parser must find zero collectives and not

@@ -292,3 +292,95 @@ class TestServingOnRuntime:
         # weight swap drops the compiled unit
         eng.register_model("gcn", _spec("gcn", ds.profile), seed=5)
         assert eng.executable("gcn", "cora") is not exe
+
+
+class TestNodeIdValidation:
+    """Negative ids used to wrap around (numpy indexing) and return the
+    WRONG node's prediction; ids >= N clamped/wrapped. Both must raise."""
+
+    def _exe(self):
+        ds = make_dataset("cora", seed=0, scale=0.05)
+        return ds, runtime.compile(_spec("gcn", ds.profile), ds,
+                                   backend="reference", max_shard_n=64)
+
+    def test_predict_rejects_out_of_range_ids(self):
+        ds, exe = self._exe()
+        n = ds.profile.num_nodes
+        with pytest.raises(ValueError, match="node ids"):
+            exe.predict([-1])
+        with pytest.raises(ValueError, match="node ids"):
+            exe.predict([0, n])
+        # valid boundary ids still work
+        classes, probs = exe.predict([0, n - 1])
+        assert classes.shape == (2,)
+
+    def test_forward_nodes_rejects_out_of_range_ids(self):
+        ds, exe = self._exe()
+        with pytest.raises(ValueError, match="node ids"):
+            exe.forward_nodes([-3])
+        with pytest.raises(ValueError, match="node ids"):
+            exe.forward_nodes([ds.profile.num_nodes + 7])
+
+    def test_stale_ids_surface_as_typed_failed_outcome(self):
+        """A request validated by route() against the profile at admission
+        can still hit a smaller graph at step time (re-registration race);
+        the Executable's ValueError must come back as a typed Failed for
+        THAT request only — a valid request sharing the micro-batch still
+        completes."""
+        from repro.serving import Completed, Failed, SchedulerConfig, Server
+        from repro.serving.gnn_engine import GNNServeEngine, NodeRequest
+
+        big = make_dataset("cora", seed=0, scale=0.05)
+        small = make_dataset("cora", seed=0, scale=0.02)
+        eng = GNNServeEngine(max_shard_n=64, backend="reference")
+        eng.register_graph("cora", big)
+        eng.register_model("gcn", _spec("gcn", big.profile))
+        server = Server(eng, SchedulerConfig(max_batch_size=2))
+        bad = server.submit(NodeRequest(
+            "cora", np.array([big.profile.num_nodes - 1]), "gcn"))
+        ok = server.submit(NodeRequest("cora", np.array([0]), "gcn"))
+        # shrink the graph after admission, before dispatch: both requests
+        # are already queued on the same (model, graph) stream
+        eng.register_graph("cora", small)
+        server.drain()
+        out = bad.result()
+        assert isinstance(out, Failed)
+        assert "node ids" in out.error
+        # the co-batched valid request is NOT poisoned by its neighbor
+        assert isinstance(ok.result(), Completed)
+        m = server.metrics()
+        assert m["failed"] == 1 and m["completed"] == 1
+
+
+class TestParamSerializationRobustness:
+    def test_unflatten_handles_non_contiguous_digit_keys(self):
+        from repro.runtime.executable import (_flatten_params,
+                                              _unflatten_params)
+        tree = {"layers": [{"w": np.ones((2, 2))},
+                           {"w": np.full((2, 2), 2.0)},
+                           {"w": np.full((2, 2), 3.0)}]}
+        flat = _flatten_params(tree)
+        # prune the middle layer, as a pruned/partial checkpoint would
+        pruned = {k: v for k, v in flat.items() if "/1/" not in k}
+        rebuilt = _unflatten_params(pruned)
+        assert len(rebuilt["layers"]) == 2
+        np.testing.assert_array_equal(np.asarray(rebuilt["layers"][0]["w"]),
+                                      flat["layers/0/w"])
+        np.testing.assert_array_equal(np.asarray(rebuilt["layers"][1]["w"]),
+                                      flat["layers/2/w"])
+
+    def test_load_params_roundtrip_with_pruned_checkpoint(self, tmp_path):
+        ds = make_dataset("cora", seed=0, scale=0.05)
+        spec = _spec("gcn", ds.profile)
+        exe = runtime.compile(spec, ds, backend="reference", max_shard_n=64)
+        path = tmp_path / "params.npz"
+        exe.save_params(path)
+        # rewrite the archive with a gap in the layer indices: layer 1
+        # saved under index 3 (a partial export / manual surgery case)
+        with np.load(path) as z:
+            flat = {k.replace("layers/1/", "layers/3/"): z[k] for k in z}
+        np.savez(path, **flat)
+        loaded = exe.load_params(path)     # must not KeyError
+        assert len(loaded["layers"]) == len(spec.layer_dims)
+        logits = exe.forward()             # still runs end to end
+        assert logits.shape == (ds.profile.num_nodes, ds.profile.num_classes)
