@@ -1,0 +1,180 @@
+"""GNN training benchmark: step time, steps-to-accuracy, and hot-reload
+latency into serving, recorded to BENCH_gnn.json (`gnn_train` section).
+
+Three measurements:
+
+  * **train** — full-batch `runtime.fit` training on cora/citeseer
+    (reference backend, so the numbers measure the training stack, not
+    Pallas interpret-mode overhead): mean/median step wall time after the
+    first traced step, and the first step reaching the target train
+    accuracy (the tier-1 acceptance threshold, 0.75).
+  * **minibatch** — neighbor-sampled steps on cora (fixed-budget
+    subgraphs, one jit trace): mean step time including the numpy
+    sample+shard work, for comparison against the full-batch step.
+  * **reload** — serving-side weight swap: ms to hot-reload trained
+    params into a compiled Executable through ``Server.reload`` (no
+    recompile), the first post-reload request (pays one full-graph
+    softmax recompute), and a warm request after it.
+
+    PYTHONPATH=src python -m benchmarks.gnn_train
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.report import merge_bench_json
+
+TRAIN_GRAPHS = ("cora", "citeseer")
+ARCH = "gcn"
+STEPS = 200
+TARGET_ACC = 0.75
+BACKEND = "reference"
+MINIBATCH_STEPS = 30
+
+
+def _trainable(ds, *, batch_nodes=0, fanout=(10, 5)):
+    from repro import runtime
+    from repro.gnn.models import ZooSpec
+    from repro.graphs.sampler import NeighborSampler
+    from repro.runtime.fit import TrainableExecutable
+    from repro.training.optimizer import AdamWConfig
+
+    spec = ZooSpec(ARCH, ds.profile.feature_dim, 16, ds.profile.num_classes)
+    exe = runtime.compile(spec, ds, backend=BACKEND)
+    sampler = None
+    if batch_nodes:
+        sampler = NeighborSampler(ds.edges, ds.profile.num_nodes,
+                                  batch_nodes=batch_nodes, fanout=fanout,
+                                  seed_ids=np.flatnonzero(ds.train_mask))
+    opt = AdamWConfig(lr=1e-2, weight_decay=0.0, grad_clip=0.0,
+                      schedule="constant", warmup_steps=0)
+    return TrainableExecutable(exe, ds.labels, train_mask=ds.train_mask,
+                               features=ds.features, opt_cfg=opt,
+                               sampler=sampler)
+
+
+def _run_steps(tr, steps: int):
+    """Manual loop (instead of TrainLoop) so every step is timed and the
+    per-step train accuracy is visible for steps-to-target."""
+    params, opt = tr.params, tr.opt_state
+    step_ms, accs = [], []
+    for step in range(steps):
+        batch = tr.data(step)
+        t0 = time.perf_counter()
+        params, opt, metrics = tr.step_fn(params, opt, batch)
+        acc = float(metrics["acc"])
+        step_ms.append((time.perf_counter() - t0) * 1e3)
+        accs.append(acc)
+    tr.params, tr.opt_state = params, opt
+    tr.executable.update_params(params)
+    return step_ms, accs
+
+
+def bench_training() -> dict:
+    from repro.graphs.datasets import make_dataset
+
+    out = {}
+    for name in TRAIN_GRAPHS:
+        ds = make_dataset(name, seed=0)
+        tr = _trainable(ds)
+        step_ms, accs = _run_steps(tr, STEPS)
+        to_target = next((i for i, a in enumerate(accs) if a >= TARGET_ACC),
+                         None)
+        warm = step_ms[1:]   # step 0 pays the jit trace
+        out[name] = {
+            "arch": ARCH,
+            "steps": STEPS,
+            "trace_step_ms": round(step_ms[0], 3),
+            "mean_step_ms": round(float(np.mean(warm)), 3),
+            "p50_step_ms": round(float(np.median(warm)), 3),
+            "final_train_acc": round(accs[-1], 4),
+            "steps_to_target_acc": to_target,
+            "target_acc": TARGET_ACC,
+        }
+        print(f"[train] {name}: {out[name]['mean_step_ms']:.1f} ms/step, "
+              f"acc {accs[-1]:.3f}, {to_target} steps to {TARGET_ACC}")
+    return out
+
+
+def bench_minibatch() -> dict:
+    from repro.graphs.datasets import make_dataset
+
+    ds = make_dataset("cora", seed=0)
+    tr = _trainable(ds, batch_nodes=256, fanout=(10, 5))
+    step_ms, accs = _run_steps(tr, MINIBATCH_STEPS)
+    out = {
+        "arch": ARCH, "batch_nodes": 256, "fanout": [10, 5],
+        "steps": MINIBATCH_STEPS,
+        "trace_step_ms": round(step_ms[0], 3),
+        "mean_step_ms": round(float(np.mean(step_ms[1:])), 3),
+        "final_batch_acc": round(accs[-1], 4),
+    }
+    print(f"[minibatch] cora: {out['mean_step_ms']:.1f} ms/step "
+          f"(sample+shard+update)")
+    return out
+
+
+def bench_reload() -> dict:
+    """Weight-swap latency through the serving stack."""
+    import jax
+
+    from repro.gnn.models import ZooSpec, init_zoo
+    from repro.graphs.datasets import make_dataset
+    from repro.serving import Completed, SchedulerConfig, Server
+    from repro.serving.gnn_engine import GNNServeEngine, NodeRequest
+
+    ds = make_dataset("cora", seed=0)
+    spec = ZooSpec(ARCH, ds.profile.feature_dim, 16, ds.profile.num_classes)
+    engine = GNNServeEngine(backend=BACKEND)
+    engine.register_graph("cora", ds)
+    engine.register_model("gcn", spec, seed=0)
+    server = Server(engine, SchedulerConfig(max_batch_size=8))
+
+    def one_request() -> float:
+        t = server.submit(NodeRequest("cora", np.arange(8), model="gcn"))
+        t0 = time.perf_counter()
+        server.drain()
+        ms = (time.perf_counter() - t0) * 1e3
+        assert isinstance(t.result(), Completed)
+        return ms
+
+    cold_ms = one_request()
+    warm_ms = float(np.median([one_request() for _ in range(5)]))
+
+    new_params = init_zoo(jax.random.key(1), spec)
+    t0 = time.perf_counter()
+    server.reload(lambda eng: eng.reload_params("gcn", new_params))
+    reload_ms = (time.perf_counter() - t0) * 1e3
+    post_reload_ms = one_request()       # pays the softmax recompute
+    rewarm_ms = float(np.median([one_request() for _ in range(5)]))
+
+    out = {
+        "cold_request_ms": round(cold_ms, 3),
+        "warm_request_ms": round(warm_ms, 3),
+        "reload_ms": round(reload_ms, 3),
+        "first_post_reload_request_ms": round(post_reload_ms, 3),
+        "warm_post_reload_request_ms": round(rewarm_ms, 3),
+        "compiles": engine.stats["compiles"],
+        "logits_invalidations": engine.stats["logits_invalidations"],
+    }
+    print(f"[reload] swap {reload_ms:.2f} ms, first post-reload request "
+          f"{post_reload_ms:.1f} ms (softmax recompute), warm "
+          f"{rewarm_ms:.2f} ms; {out['compiles']} compile(s) total")
+    return out
+
+
+def main() -> None:
+    payload = {
+        "backend": BACKEND,
+        "train": bench_training(),
+        "minibatch": bench_minibatch(),
+        "reload": bench_reload(),
+    }
+    merge_bench_json("gnn_train", payload)
+    print("wrote gnn_train section to BENCH_gnn.json")
+
+
+if __name__ == "__main__":
+    main()

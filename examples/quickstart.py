@@ -1,25 +1,23 @@
 """Quickstart: train a zoo GNN on (synthetic) Cora through the runtime.
 
-One ``runtime.compile()`` call plans the layer execution (feature-block
-size B, shard grid, traversal order, fused vs two-stage), shards the graph
-for the architecture's normalization signature, and jits the forward on
-the chosen kernel backend; ``Executable.forward(params)`` is
-differentiable, so the same entry point drives training.
+One ``runtime.fit()`` call compiles the model (the planner picks feature
+block size B, shard grid, traversal order, fused vs two-stage per layer),
+runs the jitted AdamW train step — full-batch by default, neighbor-sampled
+mini-batches with ``--batch-nodes`` — and hands back the trained,
+servable Executable.
 
     PYTHONPATH=src python examples/quickstart.py [--epochs 30] \
-        [--backend reference]
+        [--backend reference] [--batch-nodes 256]
 """
 import argparse
 import sys
 import time
 
-import jax
 import jax.numpy as jnp
 
 from repro import runtime
 from repro.gnn.models import ZooSpec
 from repro.graphs.datasets import make_dataset
-from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
 
 # paper Table-III names -> zoo architectures
 NETWORKS = {"gcn": "gcn", "graphsage": "sage_mean",
@@ -31,10 +29,15 @@ def main() -> int:
     ap.add_argument("--dataset", default="cora",
                     choices=["cora", "citeseer", "pubmed"])
     ap.add_argument("--network", default="gcn", choices=sorted(NETWORKS))
-    ap.add_argument("--epochs", type=int, default=30)
+    ap.add_argument("--epochs", type=int, default=30,
+                    help="full-batch steps (or mini-batch steps with "
+                         "--batch-nodes)")
     ap.add_argument("--hidden", type=int, default=16)
     ap.add_argument("--shard-n", type=int, default=512,
                     help="planner cap on nodes per shard (the paper's n)")
+    ap.add_argument("--batch-nodes", type=int, default=0,
+                    help="0 = full-batch; >0 neighbor-samples this many "
+                         "seed nodes per step")
     ap.add_argument("--backend", default=None,
                     choices=["pallas", "jax", "reference", "ref"],
                     help="kernel backend (default: REPRO_KERNEL_BACKEND "
@@ -48,32 +51,23 @@ def main() -> int:
 
     spec = ZooSpec(NETWORKS[args.network], ds.profile.feature_dim,
                    args.hidden, ds.profile.num_classes, num_layers=2)
-    exe = runtime.compile(spec, ds, backend=args.backend,
-                          max_shard_n=args.shard_n)
+    t0 = time.time()
+    result = runtime.fit(spec, ds, steps=args.epochs, lr=5e-3,
+                         backend=args.backend, max_shard_n=args.shard_n,
+                         batch_nodes=args.batch_nodes, fanout=(10, 5),
+                         log_every=max(1, args.epochs // 10))
+    exe = result.executable               # trained weights already swapped in
     print(exe.summary())
 
-    params = exe.params
     labels = jnp.asarray(ds.labels)
-    mask = jnp.asarray(ds.train_mask)
-
-    def loss_fn(p):
-        logits = exe.forward(p)
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
-        return jnp.sum(nll * mask) / jnp.sum(mask), logits
-
-    opt_cfg = AdamWConfig(lr=5e-3, weight_decay=0.0, schedule="constant",
-                          warmup_steps=0, grad_clip=0)
-    opt = adamw_init(params)
-    grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
-    for epoch in range(args.epochs):
-        t0 = time.time()
-        (loss, logits), grads = grad_fn(params)
-        params, opt, _ = adamw_update(grads, opt, params, opt_cfg)
-        acc = float(jnp.mean((jnp.argmax(logits, -1) == labels)[~ds.train_mask]))
-        print(f"epoch {epoch:3d} loss {float(loss):.4f} "
-              f"test-acc {acc:.3f} ({time.time() - t0:.2f}s)")
-    exe.set_params(params)   # trained weights now serve from the Executable
+    logits = exe.forward()
+    test_acc = float(jnp.mean(
+        (jnp.argmax(logits, -1) == labels)[~ds.train_mask]))
+    print(f"trained in {time.time() - t0:.1f}s: "
+          f"train-acc {result.train_accuracy():.3f} test-acc {test_acc:.3f}")
+    classes, probs = exe.predict([0, 1, 2])
+    print(f"predict([0,1,2]) -> classes {classes.tolist()} "
+          f"(p={[round(float(p), 3) for p in probs]})")
     print("done.")
     return 0
 

@@ -99,7 +99,9 @@ class ShardedExecutable(Executable):
         self.rows_per_device = -(-gt.S // self.n_data)
         self.S_pad = self.rows_per_device * self.n_data
         pad = self.S_pad - gt.S
-        self._blocks_padded = jnp.pad(
+        # pad==0 is the common case (S divisible by n_data); jnp.pad would
+        # still copy the dense grid — the single largest tensor here
+        self._blocks_padded = gt.blocks if pad == 0 else jnp.pad(
             gt.blocks, ((0, pad), (0, pad), (0, 0), (0, 0)))
         # the comm/balance plan for exactly this (padded, equal) grouping
         self.partition: PartitionPlan = partition_graph(

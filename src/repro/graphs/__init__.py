@@ -1,5 +1,6 @@
 from repro.graphs.datasets import (DATASETS, LARGE_DATASETS, TABLE2_DATASETS,
                                    GraphData, load, make_dataset)
+from repro.graphs.sampler import NeighborSampler, SubgraphBatch
 
 __all__ = ["DATASETS", "LARGE_DATASETS", "TABLE2_DATASETS", "GraphData",
-           "load", "make_dataset"]
+           "load", "make_dataset", "NeighborSampler", "SubgraphBatch"]

@@ -33,3 +33,16 @@ def make_mesh_for(devices: int, *, model_parallel: int = 16):
     assert devices % model_parallel == 0, (devices, model_parallel)
     return make_mesh((devices // model_parallel, model_parallel),
                      ("data", "model"))
+
+
+def mesh_from_cli(devices: int, model_parallel: int):
+    """Launcher-side `--mesh N --model-parallel M` handling, shared by
+    serve.py and train_gnn.py: validate the visible device count (with
+    the CPU XLA_FLAGS hint) and build the (data, model) mesh."""
+    import jax
+    if jax.device_count() < devices:
+        raise SystemExit(
+            f"--mesh {devices} needs {devices} devices but jax sees "
+            f"{jax.device_count()}; on CPU export XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={devices}")
+    return make_mesh_for(devices, model_parallel=model_parallel)

@@ -137,22 +137,15 @@ def _serve_gnn(args) -> None:
 
     mesh = None
     if args.mesh:
-        import jax
-
         from repro.dist.gnn import SUPPORTED_ARCHS
-        from repro.launch.mesh import make_mesh_for
+        from repro.launch.mesh import mesh_from_cli
 
-        if jax.device_count() < args.mesh:
-            raise SystemExit(
-                f"--mesh {args.mesh} needs {args.mesh} devices but jax "
-                f"sees {jax.device_count()}; on CPU export XLA_FLAGS="
-                f"--xla_force_host_platform_device_count={args.mesh}")
         bad = [m for m in models if m not in SUPPORTED_ARCHS]
         if bad:
             raise SystemExit(
                 f"--mesh serving supports {SUPPORTED_ARCHS}; drop {bad} "
                 f"from --models")
-        mesh = make_mesh_for(args.mesh, model_parallel=args.model_parallel)
+        mesh = mesh_from_cli(args.mesh, args.model_parallel)
         print(f"mesh: {args.mesh} devices as "
               f"data={args.mesh // args.model_parallel} x "
               f"model={args.model_parallel} (sharded Executables)")

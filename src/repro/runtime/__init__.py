@@ -18,10 +18,12 @@ from repro.kernels.registry import (KernelBackend, get_backend,
 from repro.runtime.api import compile, graph_fingerprint
 from repro.runtime.cache import GraphStore, default_store
 from repro.runtime.executable import Executable
+from repro.runtime.fit import FitResult, TrainableExecutable, fit
 from repro.runtime.forward import forward
 
 __all__ = [
-    "compile", "Executable", "forward", "GraphStore", "default_store",
+    "compile", "fit", "Executable", "TrainableExecutable", "FitResult",
+    "forward", "GraphStore", "default_store",
     "KernelBackend", "get_backend", "list_backends", "register_backend",
     "plan_cache_stats", "clear_plan_cache", "graph_fingerprint",
 ]

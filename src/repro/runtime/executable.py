@@ -54,6 +54,24 @@ def _flatten_params(tree, prefix="", out=None) -> dict:
     return out
 
 
+def validate_params_like(old, new) -> None:
+    """Raise ValueError unless ``new`` has the same pytree structure and
+    per-leaf shapes as ``old`` — the hot-reload contract (same shapes =>
+    existing jit traces keep serving). Shared by
+    :meth:`Executable.update_params` and the serving engine's
+    all-or-nothing reload pre-check."""
+    old_leaves, old_def = jax.tree_util.tree_flatten(old)
+    new_leaves, new_def = jax.tree_util.tree_flatten(new)
+    if old_def != new_def:
+        raise ValueError(
+            f"param tree mismatch: compiled {old_def}, got {new_def}")
+    for i, (o, n) in enumerate(zip(old_leaves, new_leaves)):
+        if jnp.shape(o) != jnp.shape(n):
+            raise ValueError(
+                f"param leaf {i} shape mismatch: compiled "
+                f"{jnp.shape(o)}, got {jnp.shape(n)}")
+
+
 def _unflatten_params(flat: dict):
     root: dict = {}
     for key, val in flat.items():
@@ -200,6 +218,16 @@ class Executable:
     def set_params(self, params: dict) -> None:
         self.params = params
         self.invalidate()
+
+    def update_params(self, params: dict) -> None:
+        """Hot weight reload: adopt a new parameter pytree without
+        recompiling. The tree structure and every leaf shape must match
+        the compiled params — same shapes means the existing jit traces
+        keep serving, so a reload costs one softmax recompute, not a
+        compile. The cached full-graph probabilities are invalidated
+        (exactly once) as part of the swap."""
+        validate_params_like(self.params, params)
+        self.set_params(params)
 
     # -- introspection / serialization ------------------------------------
 

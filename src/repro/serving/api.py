@@ -156,7 +156,7 @@ class Server:
         self._stopping = False
         self._ids = itertools.count()
         self._m = {"submitted": 0, "rejected": 0, "completed": 0,
-                   "failed": 0, "queue_ms_total": 0.0,
+                   "failed": 0, "reloads": 0, "queue_ms_total": 0.0,
                    "engine_ms_total": 0.0}
 
     @property
@@ -268,6 +268,25 @@ class Server:
     def queue_depth(self, key: Hashable | None = None) -> int:
         with self._cv:
             return self._sched.depth(key)
+
+    def reload(self, apply_fn):
+        """Hot engine update (e.g. a weight reload) serialized with engine
+        steps: ``apply_fn(engine)`` runs under the step lock, so a
+        micro-batch that is already inside the engine finishes on the old
+        state, and every batch dispatched after the reload sees the new
+        state — queued (in-flight) tickets are never Failed by the swap.
+
+            server.reload(lambda eng: eng.reload_params("gcn", params))
+
+        Returns ``apply_fn``'s result. Exceptions propagate to the caller
+        (the engine was not modified on a validation error) and do not
+        touch queued requests.
+        """
+        with self._step_lock:
+            out = apply_fn(self._engine)
+        with self._cv:
+            self._m["reloads"] += 1
+        return out
 
     # -- background driver (optional) --------------------------------------
 

@@ -109,6 +109,7 @@ class GNNServeEngine:
             "logits_cache_hits": 0, "logits_cache_misses": 0,
             "requests": 0, "batches": 0, "nodes_served": 0,
             "compiles": 0, "compile_ms_total": 0.0,
+            "reloads": 0, "logits_invalidations": 0,
         }
 
     @property
@@ -160,6 +161,40 @@ class GNNServeEngine:
             if (model is None or m == model) and (graph is None or g == graph):
                 exe.invalidate()
 
+    def reload_params(self, model: str, params: dict) -> int:
+        """Hot weight reload: swap ``model``'s parameters into every
+        compiled Executable **without recompiling** (same shapes, same jit
+        traces — :meth:`Executable.update_params` validates the tree).
+        Each affected Executable's logits cache is invalidated exactly
+        once, as part of the swap; later compiles on new graphs adopt the
+        new weights too.
+
+        Thread-safety is the Server's job: drive this through
+        :meth:`repro.serving.Server.reload` so the swap is serialized
+        with engine steps — the in-flight micro-batch finishes on the old
+        weights, every later batch sees the new ones.
+        """
+        from repro.runtime.executable import validate_params_like
+
+        ent = self._models[model]          # KeyError for unknown models
+        # validate against the registered params BEFORE touching any
+        # Executable, so a bad reload is all-or-nothing even when several
+        # compiled units (or none yet) hold the model
+        try:
+            validate_params_like(ent.params, params)
+        except ValueError as err:
+            raise ValueError(
+                f"reload for model {model!r} rejected: {err}") from None
+        touched = 0
+        for (m, _g), exe in self._executables.items():
+            if m == model:
+                exe.update_params(params)  # same-shape swap; invalidates once
+                touched += 1
+        ent.params = params
+        self._stats["reloads"] += 1
+        self._stats["logits_invalidations"] += touched
+        return touched
+
     # -- compile path ------------------------------------------------------
 
     def executable(self, model: str, graph: str) -> runtime.Executable:
@@ -197,6 +232,17 @@ class GNNServeEngine:
             raise KeyError(f"unknown model {req.model!r}")
         if req.graph not in self._graphs:
             raise KeyError(f"unknown graph {req.graph!r}")
+        if self.mesh is not None:
+            # sharded execution covers the linear-aggregation family only;
+            # reject HERE (admission -> typed Rejected on the ticket)
+            # instead of letting runtime.compile raise inside step(),
+            # which would Fail every co-batched request on the stream
+            from repro.dist.gnn import SUPPORTED_ARCHS
+            arch = self._models[req.model].spec.arch
+            if arch not in SUPPORTED_ARCHS:
+                raise NotImplementedError(
+                    f"model {req.model!r} ({arch}) cannot run on a mesh: "
+                    f"sharded execution supports {SUPPORTED_ARCHS}")
         ids = np.asarray(req.node_ids, dtype=np.int64)
         n_nodes = self._graphs[req.graph].profile.num_nodes
         if ids.size and (ids.min() < 0 or ids.max() >= n_nodes):
@@ -214,11 +260,6 @@ class GNNServeEngine:
         complete."""
         model, graph = key
         exe = self.executable(model, graph)
-        # one cache touch per request: the batch's first touch may compute
-        # the full-graph softmax, the rest count as hits
-        miss = 0 if exe.has_cached_probs else 1
-        self._stats["logits_cache_misses"] += miss
-        self._stats["logits_cache_hits"] += len(payloads) - miss
         checked: list[np.ndarray | Exception] = []
         for r in payloads:
             try:
@@ -227,6 +268,12 @@ class GNNServeEngine:
                 checked.append(err)
         id_batches = [ids for ids in checked
                       if not isinstance(ids, Exception)]
+        # one cache touch per VALID request (stale-id requests never reach
+        # the cache): the batch's first touch may compute the full-graph
+        # softmax, the rest count as hits
+        miss = 0 if exe.has_cached_probs or not id_batches else 1
+        self._stats["logits_cache_misses"] += miss
+        self._stats["logits_cache_hits"] += len(id_batches) - miss
         answers = iter(exe.step(id_batches))
         out: list = []
         for ids in checked:

@@ -94,10 +94,15 @@ def train_state_axes(cfg: ModelConfig):
 
 @dataclasses.dataclass
 class TrainLoop:
-    """Fault-tolerant loop: checkpoint/restart, preemption save, metrics."""
+    """Fault-tolerant loop: checkpoint/restart, preemption save, metrics.
 
-    cfg: ModelConfig
-    opt_cfg: AdamWConfig
+    ``cfg``/``opt_cfg`` may be None when an explicit ``train_step`` is
+    passed to :meth:`run` — the GNN path (runtime/fit.py) builds its own
+    jitted step and borrows only the loop mechanics (checkpoint/resume,
+    preemption save, straggler log)."""
+
+    cfg: ModelConfig | None
+    opt_cfg: AdamWConfig | None
     data_iter: Any                       # step-indexable: data_iter(step)->batch
     ckpt_manager: Any = None             # checkpoint.manager.CheckpointManager
     ckpt_every: int = 100

@@ -139,6 +139,69 @@ class TestShardedComm:
             np.testing.assert_array_equal(o.value.classes, c_ref)
 
 
+class TestShardedTraining:
+    """Data-parallel GNN training over the mesh (runtime.fit mesh path):
+    the shard_map transpose psums gradients over the data axis, so grads
+    and the trained trajectory must match a single-device run."""
+
+    @needs8
+    @pytest.mark.parametrize("arch", ["gcn", "sage_mean", "gin"])
+    def test_grads_match_single_device(self, arch):
+        import jax.numpy as jnp
+
+        from repro.runtime.fit import masked_cross_entropy
+
+        ds = make_dataset("cora", seed=0, scale=0.5)
+        spec = _spec(arch, ds.profile, hidden=8)
+        exe = runtime.compile(spec, ds, backend="reference", max_shard_n=128)
+        sexe = runtime.compile(spec, ds, backend="reference",
+                               max_shard_n=128, mesh=_mesh8(),
+                               params=exe.params)
+        labels = jnp.asarray(ds.labels.astype(np.int32))
+        mask = jnp.asarray(ds.train_mask)
+
+        def grads(e):
+            fwd = e._forward_fn()
+            loss = lambda p: masked_cross_entropy(
+                fwd(p, e._h_grouped), labels, mask)
+            return jax.grad(loss)(e.params)
+
+        for a, b in zip(jax.tree.leaves(grads(exe)),
+                        jax.tree.leaves(grads(sexe))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-4)
+
+    @needs8
+    def test_sharded_fit_matches_single_device_params(self):
+        ds = make_dataset("cora", seed=0, scale=0.3)
+        spec = _spec("gcn", ds.profile, hidden=8)
+        kw = dict(steps=3, lr=1e-2, backend="reference", max_shard_n=128,
+                  log=lambda s: None)
+        single = runtime.fit(spec, ds, **kw)
+        sharded = runtime.fit(spec, ds, mesh=_mesh8(), **kw)
+        for a, b in zip(jax.tree.leaves(single.params),
+                        jax.tree.leaves(sharded.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-4, atol=5e-4)
+
+    @needs8
+    def test_train_step_collectives_verified(self):
+        """The jitted TRAIN step's collective volume: at least the
+        forward all-gather model on the wire, plus reduction collectives
+        carrying the data-parallel gradient psum."""
+        ds = make_dataset("cora", seed=0, scale=0.3)
+        spec = _spec("gcn", ds.profile, hidden=8)
+        res = runtime.fit(spec, ds, steps=1, backend="reference",
+                          max_shard_n=128, mesh=_mesh8(),
+                          log=lambda s: None)
+        cs = res.trainable.verify_train_comm()   # asserts internally
+        assert cs["measured_wire_bytes"]["all-gather"] >= \
+            cs["forward_allgather_wire_bytes"] * 0.98
+        reduces = sum(cs["measured_counts"].get(k, 0)
+                      for k in ("all-reduce", "reduce-scatter"))
+        assert reduces > 0
+
+
 class TestPartitionRegressions:
     def test_no_empty_trailing_groups(self):
         """S=4 rows over n_data=3: the old ceil-division assignment gave

@@ -1,0 +1,88 @@
+"""Gradient parity across kernel backends, for every zoo architecture.
+
+`jax.grad` of the masked-CE training loss through a compiled Executable
+must agree whether the forward ran on the ``pallas`` kernels (backward =
+oracle-derived custom_vjp), the vectorized ``jax`` lowering, or the
+``reference`` oracles — on generic random graphs AND the degenerate
+topologies training actually hits: zero-in-degree nodes (nothing to
+aggregate) and self-loop-only graphs (every node its own neighborhood).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import runtime
+from repro.gnn.models import ARCHS, ZooSpec
+from repro.runtime.fit import masked_cross_entropy
+
+N = 18
+F, HID = 6, 8
+CLASSES = 3
+BACKENDS = ("reference", "jax", "pallas")
+GRAPH_KINDS = ("random", "zero_in_degree", "self_loops_only")
+
+
+def _graph(kind: str) -> np.ndarray:
+    rng = np.random.default_rng(11)
+    if kind == "random":
+        return rng.integers(0, N, (40, 2)).astype(np.int64)
+    if kind == "zero_in_degree":
+        # every edge lands in the first half: nodes N//2.. have in-degree 0
+        src = rng.integers(0, N, 30)
+        dst = rng.integers(0, N // 2, 30)
+        return np.stack([src, dst], axis=1).astype(np.int64)
+    if kind == "self_loops_only":
+        return np.stack([np.arange(N)] * 2, axis=1).astype(np.int64)
+    raise ValueError(kind)
+
+
+def _grads(arch: str, kind: str, backend: str, params: dict | None):
+    rng = np.random.default_rng(3)
+    feats = rng.standard_normal((N, F)).astype(np.float32)
+    labels = jnp.asarray(rng.integers(0, CLASSES, N).astype(np.int32))
+    mask = jnp.asarray(rng.random(N) < 0.7)
+    spec = ZooSpec(arch, F, HID, CLASSES, num_layers=2)
+    exe = runtime.compile(spec, (_graph(kind), N, feats), backend=backend,
+                          params=params, max_shard_n=16)
+
+    def loss(p):
+        return masked_cross_entropy(exe.forward(p), labels, mask)
+
+    return exe.params, jax.grad(loss)(exe.params)
+
+
+@settings(deadline=None, max_examples=15)
+@given(arch=st.sampled_from(ARCHS), kind=st.sampled_from(GRAPH_KINDS))
+def test_grad_parity_across_backends(arch, kind):
+    params, g_ref = _grads(arch, kind, "reference", None)
+    leaves_ref = jax.tree.leaves(g_ref)
+    # degenerate graphs must still give finite gradients with signal
+    assert all(bool(jnp.isfinite(l).all()) for l in leaves_ref)
+    assert sum(float(jnp.sum(jnp.abs(l))) for l in leaves_ref) > 0
+    for backend in BACKENDS[1:]:
+        _, g = _grads(arch, kind, backend, params)
+        for a, b in zip(leaves_ref, jax.tree.leaves(g)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_training_step_moves_params_every_arch(arch):
+    """One fit step on every architecture: loss finite, params move."""
+    from repro.graphs.datasets import make_dataset
+
+    ds = make_dataset("cora", seed=0, scale=0.1)
+    spec = ZooSpec(arch, ds.profile.feature_dim, HID,
+                   ds.profile.num_classes)
+    res = runtime.fit(spec, ds, steps=2, backend="reference",
+                      log=lambda s: None)
+    assert np.isfinite(res.history[-1][1])
+    before = runtime.compile(spec, ds, backend="reference").params
+    moved = sum(
+        float(jnp.sum(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(res.params),
+                        jax.tree.leaves(before)))
+    assert moved > 0
