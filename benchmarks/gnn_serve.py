@@ -4,7 +4,8 @@ BENCH_gnn.json.
 
 Three regimes:
   * cold    — first request per (model, graph): compiles the Executable
-              (plan + shard + jit) and runs full-graph inference (the
+              (plan + shard + jit; under ``--plan autotune`` also the
+              candidate measurements) and runs full-graph inference (the
               amortized unit of work).
   * warm    — steady-state request stream answered from the Executable's
               cached full-graph softmax (GNNIE's \"accelerator wins become
@@ -16,25 +17,36 @@ Three regimes:
               scheduler absorbed. Run on cora at ~80% of the measured warm
               throughput, so queueing is real but stable.
 
-Runs on the reference backend (pure jnp) so the numbers measure the
-serving stack, not Pallas interpret-mode overhead; pubmed is scaled down
-to keep the densified shard grid within CPU memory.
+The sweep covers both backends: reference rows (pure jnp, full-scale
+graphs) measure the serving stack itself; pallas rows run the same stack
+through the Pallas kernels (interpret mode off-TPU, hence the reduced
+graph scales). Every row records its backend and plan source.
+
+    PYTHONPATH=src python -m benchmarks.gnn_serve \
+        --backends reference,pallas --plan autotune
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 
 from benchmarks.report import merge_bench_json
 
-# (name, scale): pubmed's densified (S·n)² grid at full scale is ~1.5 GiB,
-# too big for a CPU smoke benchmark.
-GRAPHS = (("cora", 1.0), ("citeseer", 1.0), ("pubmed", 0.15))
+# (name, scale) per backend: pubmed's densified (S·n)² grid at full scale
+# is ~1.5 GiB, too big for a CPU smoke benchmark; the pallas rows shrink
+# further because interpret mode pays a large per-element cost (citeseer
+# hardest: its 3703-dim features dominate).
+GRAPHS = {
+    "reference": (("cora", 1.0), ("citeseer", 1.0), ("pubmed", 0.15)),
+    "pallas": (("cora", 0.25), ("citeseer", 0.15), ("pubmed", 0.05)),
+}
+SHARD_N = {"reference": 512, "pallas": 256}
 WARM_REQUESTS = 256
 POISSON_REQUESTS = 512
 POISSON_BATCH = 8
-BACKEND = "reference"
+DEFAULT_BACKENDS = ("reference", "pallas")
 
 
 def _poisson_regime(engine, graph: str, num_nodes: int,
@@ -94,54 +106,92 @@ def _poisson_regime(engine, graph: str, num_nodes: int,
     }
 
 
-def bench_gnn_serve():
+def bench_gnn_serve(backends=DEFAULT_BACKENDS, plan: str = "analytic",
+                    tune_budget: int = 4):
     from repro.gnn.models import ZooSpec
     from repro.graphs.datasets import make_dataset
     from repro.serving.gnn_engine import GNNServeEngine, NodeRequest
 
     rows = []
     poisson = None
-    for name, scale in GRAPHS:
-        ds = make_dataset(name, seed=0, scale=scale)
-        prof = ds.profile
-        engine = GNNServeEngine(max_shard_n=512, backend=BACKEND)
-        engine.register_graph(name, ds)
-        engine.register_model("gcn", ZooSpec("gcn", prof.feature_dim, 16,
-                                             prof.num_classes, num_layers=2))
+    for backend in backends:
+        # reference rows always use the analytic plan (the tuner's winners
+        # are environment-scoped per backend; the sweep's `plan` knob
+        # targets the backend being tuned)
+        be_plan = plan if backend != "reference" else "analytic"
+        for name, scale in GRAPHS[backend]:
+            ds = make_dataset(name, seed=0, scale=scale)
+            prof = ds.profile
+            engine = GNNServeEngine(max_shard_n=SHARD_N[backend],
+                                    backend=backend, plan=be_plan,
+                                    tune_budget=tune_budget)
+            engine.register_graph(name, ds)
+            engine.register_model("gcn",
+                                  ZooSpec("gcn", prof.feature_dim, 16,
+                                          prof.num_classes, num_layers=2))
 
-        rng = np.random.default_rng(0)
+            rng = np.random.default_rng(0)
 
-        def req():
-            ids = rng.integers(0, prof.num_nodes, size=8)
-            return NodeRequest(name, ids, model="gcn")
+            def req():
+                ids = rng.integers(0, prof.num_nodes, size=8)
+                return NodeRequest(name, ids, model="gcn")
 
-        t0 = time.perf_counter()
-        engine.serve([req()])
-        cold_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            engine.serve([req()])
+            cold_s = time.perf_counter() - t0
 
-        t0 = time.perf_counter()
-        engine.serve([req() for _ in range(WARM_REQUESTS)])
-        warm_s = time.perf_counter() - t0
-        warm_rps = WARM_REQUESTS / warm_s
+            t0 = time.perf_counter()
+            engine.serve([req() for _ in range(WARM_REQUESTS)])
+            warm_s = time.perf_counter() - t0
+            warm_rps = WARM_REQUESTS / warm_s
 
-        s = engine.stats
-        rows.append({
-            "graph": prof.name, "nodes": prof.num_nodes,
-            "edges": int(ds.edges.shape[0]), "scale": scale,
-            "cold_ms": round(cold_s * 1e3, 2),
-            "warm_req_per_s": round(warm_rps, 1),
-            "logits_cache_hits": s["logits_cache_hits"],
-            "logits_cache_misses": s["logits_cache_misses"],
-        })
-        if name == "cora":
-            poisson = _poisson_regime(engine, name, prof.num_nodes,
-                                      rate_rps=0.8 * warm_rps)
+            s = engine.stats
+            rows.append({
+                "graph": prof.name, "backend": backend,
+                "plan_source": be_plan, "nodes": prof.num_nodes,
+                "edges": int(ds.edges.shape[0]), "scale": scale,
+                "cold_ms": round(cold_s * 1e3, 2),
+                "warm_req_per_s": round(warm_rps, 1),
+                "logits_cache_hits": s["logits_cache_hits"],
+                "logits_cache_misses": s["logits_cache_misses"],
+            })
+            if backend == "reference" and name == "cora":
+                poisson = _poisson_regime(engine, name, prof.num_nodes,
+                                          rate_rps=0.8 * warm_rps)
 
     merge_bench_json("gnn_serve", {
-        "backend": BACKEND, "warm_requests": WARM_REQUESTS, "rows": rows,
-        "poisson": poisson})
-    derived = {"min_warm_rps": min(r["warm_req_per_s"] for r in rows),
-               "poisson_p99_ms": poisson["p99_ms"],
-               "poisson_peak_queue": poisson["peak_queue_depth"],
+        "backends": list(backends), "plan": plan,
+        "warm_requests": WARM_REQUESTS, "rows": rows, "poisson": poisson})
+    ref_rows = [r for r in rows if r["backend"] == "reference"]
+    derived = {"min_warm_rps": min(r["warm_req_per_s"]
+                                   for r in (ref_rows or rows)),
+               "backends": "+".join(backends),
+               "poisson_p99_ms": poisson["p99_ms"] if poisson else None,
+               "poisson_peak_queue": (poisson["peak_queue_depth"]
+                                      if poisson else None),
                "recorded": "BENCH_gnn.json"}
     return rows, derived
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backends", default=",".join(DEFAULT_BACKENDS),
+                    help="comma list of kernel backends to sweep")
+    ap.add_argument("--plan", choices=["analytic", "autotune"],
+                    default="analytic",
+                    help="plan source for non-reference backends")
+    ap.add_argument("--tune-budget", type=int, default=4)
+    args = ap.parse_args()
+
+    from repro import env
+    env.pin_for_benchmarks()
+    backends = tuple(b.strip() for b in args.backends.split(",") if b.strip())
+    rows, derived = bench_gnn_serve(backends=backends, plan=args.plan,
+                                    tune_budget=args.tune_budget)
+    for r in rows:
+        print(r)
+    print(derived)
+
+
+if __name__ == "__main__":
+    main()

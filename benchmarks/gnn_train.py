@@ -3,11 +3,13 @@ latency into serving, recorded to BENCH_gnn.json (`gnn_train` section).
 
 Three measurements:
 
-  * **train** — full-batch `runtime.fit` training on cora/citeseer
-    (reference backend, so the numbers measure the training stack, not
-    Pallas interpret-mode overhead): mean/median step wall time after the
-    first traced step, and the first step reaching the target train
-    accuracy (the tier-1 acceptance threshold, 0.75).
+  * **train** — full-batch `runtime.fit` training, one row per
+    (graph, backend): mean/median step wall time after the first traced
+    step, and the first step reaching the target train accuracy (the
+    tier-1 acceptance threshold, 0.75). Reference rows run the Table-II
+    graphs at full scale; pallas rows run cora scaled down (interpret
+    mode off-TPU pays a large per-element cost) for a reduced step
+    count, with the layer plan optionally autotuned (``--plan``).
   * **minibatch** — neighbor-sampled steps on cora (fixed-budget
     subgraphs, one jit trace): mean step time including the numpy
     sample+shard work, for comparison against the full-batch step.
@@ -16,25 +18,32 @@ Three measurements:
     recompile), the first post-reload request (pays one full-graph
     softmax recompute), and a warm request after it.
 
-    PYTHONPATH=src python -m benchmarks.gnn_train
+    PYTHONPATH=src python -m benchmarks.gnn_train \
+        --backends reference,pallas --plan autotune
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 
 from benchmarks.report import merge_bench_json
 
-TRAIN_GRAPHS = ("cora", "citeseer")
+# (graph, scale, steps) per backend
+TRAIN_GRAPHS = {
+    "reference": (("cora", 1.0, 200), ("citeseer", 1.0, 200)),
+    "pallas": (("cora", 0.25, 8),),
+}
+SHARD_N = {"reference": 512, "pallas": 256}
 ARCH = "gcn"
-STEPS = 200
 TARGET_ACC = 0.75
-BACKEND = "reference"
+DEFAULT_BACKENDS = ("reference", "pallas")
 MINIBATCH_STEPS = 30
 
 
-def _trainable(ds, *, batch_nodes=0, fanout=(10, 5)):
+def _trainable(ds, *, backend="reference", plan="analytic", tune_budget=4,
+               max_shard_n=512, batch_nodes=0, fanout=(10, 5)):
     from repro import runtime
     from repro.gnn.models import ZooSpec
     from repro.graphs.sampler import NeighborSampler
@@ -42,7 +51,8 @@ def _trainable(ds, *, batch_nodes=0, fanout=(10, 5)):
     from repro.training.optimizer import AdamWConfig
 
     spec = ZooSpec(ARCH, ds.profile.feature_dim, 16, ds.profile.num_classes)
-    exe = runtime.compile(spec, ds, backend=BACKEND)
+    exe = runtime.compile(spec, ds, backend=backend, plan=plan,
+                          tune_budget=tune_budget, max_shard_n=max_shard_n)
     sampler = None
     if batch_nodes:
         sampler = NeighborSampler(ds.edges, ds.profile.num_nodes,
@@ -72,30 +82,38 @@ def _run_steps(tr, steps: int):
     return step_ms, accs
 
 
-def bench_training() -> dict:
+def bench_training(backends=DEFAULT_BACKENDS, plan="analytic",
+                   tune_budget=4) -> list:
     from repro.graphs.datasets import make_dataset
 
-    out = {}
-    for name in TRAIN_GRAPHS:
-        ds = make_dataset(name, seed=0)
-        tr = _trainable(ds)
-        step_ms, accs = _run_steps(tr, STEPS)
-        to_target = next((i for i, a in enumerate(accs) if a >= TARGET_ACC),
-                         None)
-        warm = step_ms[1:]   # step 0 pays the jit trace
-        out[name] = {
-            "arch": ARCH,
-            "steps": STEPS,
-            "trace_step_ms": round(step_ms[0], 3),
-            "mean_step_ms": round(float(np.mean(warm)), 3),
-            "p50_step_ms": round(float(np.median(warm)), 3),
-            "final_train_acc": round(accs[-1], 4),
-            "steps_to_target_acc": to_target,
-            "target_acc": TARGET_ACC,
-        }
-        print(f"[train] {name}: {out[name]['mean_step_ms']:.1f} ms/step, "
-              f"acc {accs[-1]:.3f}, {to_target} steps to {TARGET_ACC}")
-    return out
+    rows = []
+    for backend in backends:
+        be_plan = plan if backend != "reference" else "analytic"
+        for name, scale, steps in TRAIN_GRAPHS[backend]:
+            ds = make_dataset(name, seed=0, scale=scale)
+            tr = _trainable(ds, backend=backend, plan=be_plan,
+                            tune_budget=tune_budget,
+                            max_shard_n=SHARD_N[backend])
+            step_ms, accs = _run_steps(tr, steps)
+            to_target = next((i for i, a in enumerate(accs)
+                              if a >= TARGET_ACC), None)
+            warm = step_ms[1:]   # step 0 pays the jit trace
+            row = {
+                "graph": ds.profile.name, "arch": ARCH, "backend": backend,
+                "plan_source": tr.executable.plan_source, "scale": scale,
+                "steps": steps,
+                "trace_step_ms": round(step_ms[0], 3),
+                "mean_step_ms": round(float(np.mean(warm)), 3),
+                "p50_step_ms": round(float(np.median(warm)), 3),
+                "final_train_acc": round(accs[-1], 4),
+                "steps_to_target_acc": to_target,
+                "target_acc": TARGET_ACC,
+            }
+            rows.append(row)
+            print(f"[train] {row['graph']} ({backend}/{row['plan_source']}): "
+                  f"{row['mean_step_ms']:.1f} ms/step, acc {accs[-1]:.3f}, "
+                  f"{to_target} steps to {TARGET_ACC}")
+    return rows
 
 
 def bench_minibatch() -> dict:
@@ -105,7 +123,8 @@ def bench_minibatch() -> dict:
     tr = _trainable(ds, batch_nodes=256, fanout=(10, 5))
     step_ms, accs = _run_steps(tr, MINIBATCH_STEPS)
     out = {
-        "arch": ARCH, "batch_nodes": 256, "fanout": [10, 5],
+        "arch": ARCH, "backend": "reference", "plan_source": "analytic",
+        "batch_nodes": 256, "fanout": [10, 5],
         "steps": MINIBATCH_STEPS,
         "trace_step_ms": round(step_ms[0], 3),
         "mean_step_ms": round(float(np.mean(step_ms[1:])), 3),
@@ -127,7 +146,7 @@ def bench_reload() -> dict:
 
     ds = make_dataset("cora", seed=0)
     spec = ZooSpec(ARCH, ds.profile.feature_dim, 16, ds.profile.num_classes)
-    engine = GNNServeEngine(backend=BACKEND)
+    engine = GNNServeEngine(backend="reference")
     engine.register_graph("cora", ds)
     engine.register_model("gcn", spec, seed=0)
     server = Server(engine, SchedulerConfig(max_batch_size=8))
@@ -151,6 +170,7 @@ def bench_reload() -> dict:
     rewarm_ms = float(np.median([one_request() for _ in range(5)]))
 
     out = {
+        "backend": "reference", "plan_source": "analytic",
         "cold_request_ms": round(cold_ms, 3),
         "warm_request_ms": round(warm_ms, 3),
         "reload_ms": round(reload_ms, 3),
@@ -166,9 +186,21 @@ def bench_reload() -> dict:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backends", default=",".join(DEFAULT_BACKENDS),
+                    help="comma list of kernel backends to sweep")
+    ap.add_argument("--plan", choices=["analytic", "autotune"],
+                    default="analytic",
+                    help="plan source for non-reference backends")
+    ap.add_argument("--tune-budget", type=int, default=4)
+    args = ap.parse_args()
+
+    from repro import env
+    env.pin_for_benchmarks()
+    backends = tuple(b.strip() for b in args.backends.split(",") if b.strip())
     payload = {
-        "backend": BACKEND,
-        "train": bench_training(),
+        "train": bench_training(backends=backends, plan=args.plan,
+                                tune_budget=args.tune_budget),
         "minibatch": bench_minibatch(),
         "reload": bench_reload(),
     }

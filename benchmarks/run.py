@@ -24,6 +24,10 @@ def _run(name: str, fn, *args):
 
 
 def main() -> None:
+    from repro import env
+    env.pin_for_benchmarks()
+
+    from benchmarks.gnn_autotune import bench_gnn_autotune
     from benchmarks.gnn_serve import bench_gnn_serve
     from benchmarks.kernel_bench import bench_kernels
     from benchmarks.paper_tables import (bench_fig3, bench_fig4, bench_fig5,
@@ -42,6 +46,7 @@ def main() -> None:
     all_rows["gnn_serve"] = _run("gnn_serve", bench_gnn_serve)
     all_rows["runtime_compile"] = _run("runtime_compile",
                                        bench_runtime_compile)
+    all_rows["gnn_autotune"] = _run("gnn_autotune", bench_gnn_autotune)
     all_rows["roofline"] = _run("roofline", bench_roofline)
 
     print("\n=== detailed tables ===", file=sys.stderr)

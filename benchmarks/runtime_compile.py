@@ -43,7 +43,8 @@ def bench_runtime_compile():
             cached_ms = (time.perf_counter() - t0) * 1e3
 
             rows.append({
-                "graph": prof.name, "arch": arch, "scale": scale,
+                "graph": prof.name, "arch": arch, "backend": BACKEND,
+                "plan_source": exe.plan_source, "scale": scale,
                 "shard_n": exe.plan.shard_n,
                 "cold_compile_ms": round(cold_ms, 2),
                 "cached_compile_ms": round(cached_ms, 2),

@@ -1,0 +1,107 @@
+"""Centralized XLA/JAX performance-environment knobs (`repro.env`).
+
+The knobs that decide what a wall-clock measurement *means* — float
+width, target platform, virtual host-device count — were historically
+scattered across CI yaml, test shims and launcher docstrings as raw
+``JAX_PLATFORMS`` / ``JAX_ENABLE_X64`` / ``XLA_FLAGS`` strings. This
+module is the one place that sets them, and the benchmark/tuning entry
+points go through :func:`pin_for_benchmarks` so every recorded number
+(BENCH_gnn.json rows, autotuned winners) was taken under a *pinned,
+describable* environment.
+
+Ordering matters: ``XLA_FLAGS``/``JAX_PLATFORMS`` only take effect
+before jax initializes its backends, so the setters mutate ``os.environ``
+and warn (rather than silently no-op) when jax is already live. Always
+call these at the top of a ``main()``, before the first repro/jax import
+does real work.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+import warnings
+
+_HOST_DEV_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _jax_initialized() -> bool:
+    """True once jax has picked its backends (env changes stop mattering)."""
+    mod = sys.modules.get("jax")
+    if mod is None:
+        return False
+    try:
+        # jax.config reads don't initialize backends; the backend registry
+        # does, and it exposes whether it already ran
+        from jax._src import xla_bridge
+        return xla_bridge.backends_are_initialized()
+    except Exception:   # noqa: BLE001 — private API moved: assume live
+        return True
+
+
+def _warn_if_late(knob: str) -> None:
+    if _jax_initialized():
+        warnings.warn(
+            f"repro.env: {knob} set after jax initialized its backends — "
+            f"it will not take effect in this process", RuntimeWarning,
+            stacklevel=3)
+
+
+def set_platform(platform: str) -> None:
+    """Pin the jax platform ("cpu" / "gpu" / "tpu") via ``JAX_PLATFORMS``."""
+    _warn_if_late("platform")
+    os.environ["JAX_PLATFORMS"] = platform
+
+
+def set_host_device_count(n: int) -> None:
+    """Expose ``n`` virtual host devices (CPU mesh testing), merging into
+    any existing ``XLA_FLAGS`` instead of clobbering them."""
+    _warn_if_late("host device count")
+    flags = os.environ.get("XLA_FLAGS", "")
+    flags = re.sub(rf"{_HOST_DEV_FLAG}=\d+\s*", "", flags).strip()
+    os.environ["XLA_FLAGS"] = f"{flags} {_HOST_DEV_FLAG}={n}".strip()
+
+
+def enable_x64(on: bool = True) -> None:
+    """Toggle 64-bit jax arrays (works before or after jax import)."""
+    os.environ["JAX_ENABLE_X64"] = "1" if on else "0"
+    if sys.modules.get("jax") is not None:
+        import jax
+        jax.config.update("jax_enable_x64", bool(on))
+
+
+def configure(*, platform: str | None = None, x64: bool | None = None,
+              host_devices: int | None = None) -> None:
+    """Apply any subset of the knobs in the right order."""
+    if host_devices is not None:
+        set_host_device_count(host_devices)
+    if platform is not None:
+        set_platform(platform)
+    if x64 is not None:
+        enable_x64(x64)
+
+
+def pin_for_benchmarks(*, platform: str | None = None) -> dict:
+    """The pinned measurement environment for benchmarks and tuning runs.
+
+    Pins the platform (default: keep an explicit ``JAX_PLATFORMS`` if the
+    caller exported one, else cpu — benchmark numbers must never silently
+    move between devices) and 32-bit arrays (the kernels' dtype), then
+    returns :func:`describe` for embedding into the result record.
+    """
+    configure(platform=platform or os.environ.get("JAX_PLATFORMS") or "cpu",
+              x64=False)
+    return describe()
+
+
+def describe() -> dict:
+    """Snapshot of the execution environment a measurement ran under
+    (recorded alongside benchmark rows and autotuned winners)."""
+    import jax
+    return {
+        "jax_version": jax.__version__,
+        "jax_platform": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "x64": bool(jax.config.read("jax_enable_x64")),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+    }

@@ -142,43 +142,60 @@ def _graph_time(p: Platform, work: LayerWork, traffic: Traffic) -> float:
     return max(t_cmp, t_mem, t_edge)
 
 
-def plan_layer(spec: ZooSpec, layer: int, num_nodes: int, num_edges: int, *,
-               platform: Platform = GNNERATOR, max_n: int = 1024,
-               block_candidates: tuple[int, ...] = _BLOCK_CANDIDATES,
-               ) -> LayerPlan:
+def enumerate_layer_plans(spec: ZooSpec, layer: int, num_nodes: int,
+                          num_edges: int, *,
+                          platform: Platform = GNNERATOR, max_n: int = 1024,
+                          block_candidates: tuple[int, ...] = _BLOCK_CANDIDATES,
+                          orders: tuple[Order, ...] | None = None,
+                          ) -> list[LayerPlan]:
+    """Every (B, n, S, order, fused) candidate for one layer, ranked by
+    the Table-I analytic estimate (ascending ``est_layer_s``).
+
+    ``plan_layer`` takes rank 0; the empirical autotuner
+    (:mod:`repro.tune`) measures the top-k on the real backend instead of
+    trusting the estimate. ``orders`` widens the search beyond the
+    analytically best traversal (the tuner passes both)."""
     work = _layer_work(spec, layer, num_nodes, num_edges)
     d = work.d_agg
     budget = int(platform.onchip_graph_mb * 2 ** 20)
     fusable = spec.arch == "gcn"           # linear agg, graph-first, no bias
 
     cands = sorted({b for b in block_candidates if b < d} | {d})
-    best: LayerPlan | None = None
+    out: list[LayerPlan] = []
     for b in cands:
         n = min(max_shard_nodes_for_budget(budget, b, _F32), max_n, num_nodes)
         s = cdiv(num_nodes, n)
-        order = best_order(s)
-        df = Dataflow(S=s, D=d, B=b, order=order)
-        traffic = simulate_traffic(df, nodes_per_shard=n,
-                                   edges_per_shard=num_edges / (s * s),
-                                   dtype_bytes=_F32)
-        tg = _graph_time(platform, work, traffic)
-        td = dense_stage_time(platform, work, b)
-        # fused: fine-grain pipeline at dimension-block granularity, the
-        # h_agg intermediate never touches HBM.
-        t_fused = max(tg, td) + min(tg, td) / max(df.num_blocks, 1)
-        # two-stage: coarse overlap + the intermediate's HBM round trip.
-        t_mid = 2.0 * num_nodes * d * _F32 / (platform.dram_gbs * 1e9)
-        t_two = max(tg, td) + min(tg, td) / 2 + t_mid
-        for fused, t in (((True, t_fused),) if fusable else ()) + \
-                        ((False, t_two),):
-            cand = LayerPlan(layer=layer, d_agg=d, B=b, n=n, S=s, order=order,
-                             fused=fused, est_graph_s=tg, est_dense_s=td,
-                             est_layer_s=t,
-                             est_offchip_bytes=traffic.offchip_bytes)
-            if best is None or cand.est_layer_s < best.est_layer_s:
-                best = cand
-    assert best is not None
-    return best
+        for order in (orders if orders is not None else (best_order(s),)):
+            df = Dataflow(S=s, D=d, B=b, order=order)
+            traffic = simulate_traffic(df, nodes_per_shard=n,
+                                       edges_per_shard=num_edges / (s * s),
+                                       dtype_bytes=_F32)
+            tg = _graph_time(platform, work, traffic)
+            td = dense_stage_time(platform, work, b)
+            # fused: fine-grain pipeline at dimension-block granularity, the
+            # h_agg intermediate never touches HBM.
+            t_fused = max(tg, td) + min(tg, td) / max(df.num_blocks, 1)
+            # two-stage: coarse overlap + the intermediate's HBM round trip.
+            t_mid = 2.0 * num_nodes * d * _F32 / (platform.dram_gbs * 1e9)
+            t_two = max(tg, td) + min(tg, td) / 2 + t_mid
+            for fused, t in (((True, t_fused),) if fusable else ()) + \
+                            ((False, t_two),):
+                out.append(LayerPlan(
+                    layer=layer, d_agg=d, B=b, n=n, S=s, order=order,
+                    fused=fused, est_graph_s=tg, est_dense_s=td,
+                    est_layer_s=t,
+                    est_offchip_bytes=traffic.offchip_bytes))
+    out.sort(key=lambda p: p.est_layer_s)
+    return out
+
+
+def plan_layer(spec: ZooSpec, layer: int, num_nodes: int, num_edges: int, *,
+               platform: Platform = GNNERATOR, max_n: int = 1024,
+               block_candidates: tuple[int, ...] = _BLOCK_CANDIDATES,
+               ) -> LayerPlan:
+    return enumerate_layer_plans(
+        spec, layer, num_nodes, num_edges, platform=platform, max_n=max_n,
+        block_candidates=block_candidates)[0]
 
 
 # --------------------------------------------------------------------------
@@ -195,13 +212,24 @@ _PLAN_CACHE_STATS = {"hits": 0, "misses": 0, "disk_hits": 0}
 
 def plan_key(spec: ZooSpec, num_nodes: int, num_edges: int, *,
              platform: Platform, max_n: int,
-             block_candidates: tuple[int, ...]) -> str:
-    """Content hash of every input that shapes the plan."""
+             block_candidates: tuple[int, ...],
+             scope: dict | None = None) -> str:
+    """Content hash of every input that shapes the plan.
+
+    ``scope`` folds additional key material into the hash. Analytic plans
+    are a pure function of (spec, graph size, platform, knobs) and leave
+    it ``None``; *measured* plans are only valid for the exact execution
+    environment they were timed in, so the autotuner's winner store
+    (:mod:`repro.tune.store`) passes the (plan source, kernel backend,
+    jax platform, jax version, tuner version, budget, seed) scope — an
+    autotuned pallas winner can never be served to a reference-backend
+    compile, a different jax install, or a newer tuner."""
     payload = json.dumps({
         "spec": dataclasses.asdict(spec),
         "num_nodes": num_nodes, "num_edges": num_edges,
         "platform": dataclasses.asdict(platform),
         "max_n": max_n, "block_candidates": list(block_candidates),
+        **({"scope": scope} if scope else {}),
     }, sort_keys=True)
     return hashlib.sha256(payload.encode()).hexdigest()
 

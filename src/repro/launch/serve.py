@@ -150,8 +150,12 @@ def _serve_gnn(args) -> None:
               f"data={args.mesh // args.model_parallel} x "
               f"model={args.model_parallel} (sharded Executables)")
 
+    if args.plan == "autotune":
+        print(f"plan source: autotune (budget {args.tune_budget} candidates "
+              f"per (model, graph); winners memoized via REPRO_PLAN_CACHE)")
     engine = GNNServeEngine(max_shard_n=args.shard_n, backend=args.backend,
-                            mesh=mesh)
+                            mesh=mesh, plan=args.plan,
+                            tune_budget=args.tune_budget)
     datasets = {}
     for g in graphs:
         # pre-check against the engine's densification limit BEFORE paying
@@ -244,6 +248,13 @@ def main() -> None:
     ap.add_argument("--model-parallel", type=int, default=2,
                     help="model-axis size of the --mesh (data axis = "
                          "devices / model_parallel)")
+    ap.add_argument("--plan", choices=["analytic", "autotune"],
+                    default="analytic",
+                    help="layer-plan source: Table-I cost model, or "
+                         "measured winners from the repro.tune autotuner")
+    ap.add_argument("--tune-budget", type=int, default=8,
+                    help="--plan autotune: max candidate plans measured "
+                         "per (model, graph)")
     ap.add_argument("--shard-n", type=int, default=512)
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--nodes-per-req", type=int, default=8)

@@ -42,6 +42,12 @@ def main() -> None:
                     help="dataset node/edge scale factor")
     ap.add_argument("--backend", default=None,
                     choices=["pallas", "jax", "reference", "ref"])
+    ap.add_argument("--plan", choices=["analytic", "autotune"],
+                    default="analytic",
+                    help="layer-plan source: Table-I cost model, or "
+                         "measured winners from the repro.tune autotuner")
+    ap.add_argument("--tune-budget", type=int, default=8,
+                    help="--plan autotune: max candidate plans measured")
     ap.add_argument("--shard-n", type=int, default=512)
     ap.add_argument("--batch-nodes", type=int, default=0,
                     help="0 trains full-batch; >0 neighbor-samples this "
@@ -92,6 +98,7 @@ def main() -> None:
         else 0,
         batch_nodes=args.batch_nodes, fanout=fanout,
         backend=args.backend, mesh=mesh, max_shard_n=args.shard_n,
+        plan=args.plan, tune_budget=args.tune_budget,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         log_every=args.log_every)
     dt = time.time() - t0

@@ -10,7 +10,10 @@ One ``compile()`` call replaces the old hand-chained
 ``plan_model → build_zoo_graph → init_zoo → zoo_forward`` pipeline (those
 remain as deprecation shims in :mod:`repro.gnn.models`). Kernel backends
 (``pallas`` / ``jax`` / ``reference``) are pluggable per compile and per
-op via :mod:`repro.kernels.registry`.
+op via :mod:`repro.kernels.registry`. Plans come from one of two
+sources: the analytic Table-I cost model (``plan="analytic"``, default)
+or the empirical autotuner (``plan="autotune"``, :mod:`repro.tune`) that
+measures the analytic top-k on the real backend and memoizes the winner.
 """
 from repro.gnn.executor import clear_plan_cache, plan_cache_stats
 from repro.kernels.registry import (KernelBackend, get_backend,
@@ -20,10 +23,12 @@ from repro.runtime.cache import GraphStore, default_store
 from repro.runtime.executable import Executable
 from repro.runtime.fit import FitResult, TrainableExecutable, fit
 from repro.runtime.forward import forward
+from repro.tune import clear_tune_cache, tune_cache_stats
 
 __all__ = [
     "compile", "fit", "Executable", "TrainableExecutable", "FitResult",
     "forward", "GraphStore", "default_store",
     "KernelBackend", "get_backend", "list_backends", "register_backend",
     "plan_cache_stats", "clear_plan_cache", "graph_fingerprint",
+    "tune_cache_stats", "clear_tune_cache",
 ]

@@ -72,6 +72,12 @@ def compile(spec: ZooSpec, graph, *,
             graph_key=None,
             mesh=None,
             donate_features: bool = False,
+            plan: str = "analytic",
+            tune_budget: int = 16,
+            tune_seed: int = 0,
+            tune_reps: int = 3,
+            tune_warmup: int = 1,
+            tune_timeout_s: float | None = 30.0,
             plan_cache_dir=None) -> Executable:
     """Plan, shard, initialize and jit one zoo model for one graph.
 
@@ -98,9 +104,21 @@ def compile(spec: ZooSpec, graph, *,
         fingerprint of the edge list).
       donate_features: jit the features-passed forward path with the input
         buffer donated.
-      plan_cache_dir: persist/load plans as JSON (default: env
-        ``REPRO_PLAN_CACHE``).
+      plan: plan source — ``"analytic"`` trusts the Table-I cost model;
+        ``"autotune"`` measures the analytic top-k candidates on the
+        resolved backend (:func:`repro.tune.autotune_plan`) and compiles
+        the measured winner, memoized through the plan cache under an
+        environment-scoped key.
+      tune_budget / tune_seed / tune_reps / tune_warmup / tune_timeout_s:
+        autotuner knobs (max candidates measured; memo-key seed;
+        median-of-k reps; warm-up runs; per-candidate timeout). Ignored
+        for ``plan="analytic"``.
+      plan_cache_dir: persist/load plans (and autotuned winners) as JSON
+        (default: env ``REPRO_PLAN_CACHE``).
     """
+    if plan not in ("analytic", "autotune"):
+        raise ValueError(f"plan must be 'analytic' or 'autotune', "
+                         f"got {plan!r}")
     edges, num_nodes, features = _as_graph(graph)
     # precedence per op: explicit op_backends > explicit backend arg >
     # REPRO_KERNEL_BACKEND_<OP> env > global env > default. An explicit
@@ -116,25 +134,46 @@ def compile(spec: ZooSpec, graph, *,
     if per_op:
         be = registry.composite_backend(be, per_op)
 
-    plan_kwargs = dict(platform=platform, max_n=max_shard_n,
-                       cache_dir=plan_cache_dir)
-    if block_candidates is not None:
-        plan_kwargs["block_candidates"] = tuple(block_candidates)
-    plan = plan_model(spec, num_nodes, int(edges.shape[0]), **plan_kwargs)
-
     if graph_key is None:
         graph_key = graph_fingerprint(edges, num_nodes, features)
     # explicit None check: GraphStore has __len__, so an empty store is falsy
-    entry = (default_store() if store is None else store).get(
-        graph_key, edges, num_nodes, plan.shard_n, spec.arch,
-        features=features)
+    the_store = default_store() if store is None else store
 
     if params is None:
         params = init_zoo(jax.random.key(seed), spec)
 
-    kw = dict(spec=spec, plan=plan, backend=be, gt=entry.gt,
+    plan_kwargs = dict(platform=platform, max_n=max_shard_n,
+                       cache_dir=plan_cache_dir)
+    if block_candidates is not None:
+        plan_kwargs["block_candidates"] = tuple(block_candidates)
+
+    plan_source, tune_report = "analytic", None
+    if plan == "autotune":
+        if mesh is not None:
+            raise ValueError(
+                "plan='autotune' measures the single-device forward and "
+                "cannot tune sharded (mesh=) execution yet; compile with "
+                "plan='analytic' on a mesh")
+        from repro import tune
+        rec = tune.autotune_plan(
+            spec, edges, num_nodes, backend=be, features=features,
+            params=params, budget=tune_budget, seed=tune_seed,
+            reps=tune_reps, warmup=tune_warmup, timeout_s=tune_timeout_s,
+            cache_dir=plan_cache_dir, store=the_store, graph_key=graph_key,
+            **{k: v for k, v in plan_kwargs.items() if k != "cache_dir"})
+        mplan, plan_source, tune_report = rec.plan, rec.plan_source, \
+            rec.report()
+    else:
+        mplan = plan_model(spec, num_nodes, int(edges.shape[0]),
+                           **plan_kwargs)
+
+    entry = the_store.get(graph_key, edges, num_nodes, mplan.shard_n,
+                          spec.arch, features=features)
+
+    kw = dict(spec=spec, plan=mplan, backend=be, gt=entry.gt,
               h_grouped=entry.h_grouped, params=params,
-              graph_key=graph_key, donate_features=donate_features)
+              graph_key=graph_key, donate_features=donate_features,
+              plan_source=plan_source, tune_report=tune_report)
     if mesh is not None:
         from repro.dist.gnn import ShardedExecutable
         return ShardedExecutable(mesh=mesh, **kw)

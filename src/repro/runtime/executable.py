@@ -101,13 +101,21 @@ class Executable:
     def __init__(self, *, spec: ZooSpec, plan: ModelPlan,
                  backend: KernelBackend, gt: GraphTensors,
                  h_grouped: jax.Array | None, params: dict,
-                 graph_key=None, donate_features: bool = False):
+                 graph_key=None, donate_features: bool = False,
+                 plan_source: str = "analytic",
+                 tune_report: dict | None = None):
         self.spec = spec
         self.plan = plan
         self.backend = backend
         self.gt = gt
         self.params = params
         self.graph_key = graph_key
+        # where the plan came from ("analytic" | "autotune" |
+        # "analytic_fallback") and, for tuned plans, the measurement
+        # evidence (winner vs analytic ms, candidates tried) — surfaced by
+        # summary() so a serving operator can see WHY this config runs
+        self.plan_source = plan_source
+        self.tune_report = tune_report
         self._h_grouped = h_grouped
         self._probs: np.ndarray | None = None
 
@@ -235,9 +243,26 @@ class Executable:
         n_params = sum(int(np.prod(np.shape(x)))
                        for x in jax.tree_util.tree_leaves(self.params))
         head = (f"Executable[{self.spec.arch}] backend={self.backend.name} "
-                f"params={n_params} grid={self.gt.S}x{self.gt.S} "
-                f"n={self.gt.n}")
-        return head + "\n" + self.plan.summary()
+                f"plan={self.plan_source} params={n_params} "
+                f"grid={self.gt.S}x{self.gt.S} n={self.gt.n}")
+        lines = [head]
+        r = self.tune_report
+        if r is not None:
+            if r.get("winner_ms") is not None:
+                vs = (f"vs analytic {r['analytic_ms']:.3f} ms "
+                      f"({r['speedup']:.2f}x, " if r.get("analytic_ms")
+                      else "(analytic unmeasured, ")
+                lines.append(
+                    f"  autotune: winner {r['winner_ms']:.3f} ms "
+                    f"{vs}{r['candidates_measured']} candidates, "
+                    f"{r['candidates_failed']} failed)")
+            else:
+                lines.append(
+                    f"  autotune: analytic fallback "
+                    f"({r['candidates_measured']} candidates, "
+                    f"{r['candidates_failed']} failed)")
+        lines.append(self.plan.summary())
+        return "\n".join(lines)
 
     def plan_json(self) -> dict:
         return self.plan.to_json()

@@ -355,6 +355,7 @@ def fit(spec: ZooSpec, graph, labels=None, *,
         schedule: str = "constant", warmup_steps: int = 0,
         batch_nodes: int = 0, fanout: Sequence[int] = (10, 5),
         backend=None, mesh=None, max_shard_n: int = 1024,
+        plan: str = "analytic", tune_budget: int = 16,
         params: dict | None = None, seed: int = 0, store=None,
         ckpt_manager=None, ckpt_dir=None, ckpt_every: int = 50,
         log_every: int = 25, log: Callable[[str], None] = print
@@ -398,6 +399,7 @@ def fit(spec: ZooSpec, graph, labels=None, *,
 
     exe = runtime.compile(spec, graph, backend=backend, mesh=mesh,
                           max_shard_n=max_shard_n, params=params,
+                          plan=plan, tune_budget=tune_budget,
                           seed=seed, store=store)
     opt_cfg = opt or AdamWConfig(
         lr=lr, weight_decay=weight_decay, grad_clip=grad_clip,

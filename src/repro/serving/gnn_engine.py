@@ -91,10 +91,23 @@ class GNNServeEngine:
 
     def __init__(self, *, max_graph_entries: int = 8,
                  max_shard_n: int = 1024, max_dense_gib: float = 8.0,
-                 backend: str | None = None, mesh=None):
+                 backend: str | None = None, mesh=None,
+                 plan: str = "analytic", tune_budget: int = 16):
+        if plan not in ("analytic", "autotune"):
+            raise ValueError(f"plan must be 'analytic' or 'autotune', "
+                             f"got {plan!r}")
+        if plan == "autotune" and mesh is not None:
+            raise ValueError("plan='autotune' cannot tune sharded (mesh=) "
+                             "execution; use plan='analytic' with mesh")
         self._graphs: dict[str, GraphData] = {}
         self._models: dict[str, _ModelEntry] = {}
         self._store = runtime.GraphStore(max_entries=max_graph_entries)
+        # plan source every compiled unit uses: "analytic" (Table-I cost
+        # model) or "autotune" (measured winners, repro.tune) — the first
+        # request on a (model, graph) pair pays the tuning run, later
+        # compiles hit the winner store
+        self.plan_source = plan
+        self.tune_budget = tune_budget
         # a (data, model) jax mesh: compiled units become sharded
         # Executables (repro.dist.gnn) serving from every device
         self.mesh = mesh
@@ -211,7 +224,8 @@ class GNNServeEngine:
             exe = runtime.compile(
                 ent.spec, self._graphs[graph], params=ent.params,
                 backend=self.backend, max_shard_n=self.max_shard_n,
-                store=self._store, graph_key=graph, mesh=self.mesh)
+                store=self._store, graph_key=graph, mesh=self.mesh,
+                plan=self.plan_source, tune_budget=self.tune_budget)
             self._executables[key] = exe
             self._stats["compiles"] += 1
             self._stats["compile_ms_total"] += \

@@ -1,0 +1,150 @@
+"""repro.tune — empirical kernel autotuner (measured plans over Table I).
+
+The analytic Table-I planner estimates which (shard S, feature block B,
+traversal order, fused-vs-two-stage) dataflow is fastest per layer; this
+package *measures* it. :func:`autotune_plan` enumerates the analytic
+top-k whole-model candidates (:mod:`repro.tune.search`), times each on
+the real kernel backend with warm-up + median-of-k and per-candidate
+timeout/OOM guards (:mod:`repro.tune.measure`), and memoizes the winner
+through the ``REPRO_PLAN_CACHE`` disk cache under an environment-scoped
+key (:mod:`repro.tune.store`).
+
+The runtime entry point is::
+
+    exe = runtime.compile(spec, graph, backend="pallas",
+                          plan="autotune", tune_budget=8)
+    print(exe.summary())   # reports which source/config won and by how much
+
+The analytic plan is always candidate #0, so the measured winner is
+``>=`` the analytic choice by construction; if every measurement fails
+(bad backend, OOM on every config) the analytic plan is returned as an
+explicit ``analytic_fallback`` — tuning degrades, never crashes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.perf_model import GNNERATOR, Platform
+from repro.gnn.executor import _BLOCK_CANDIDATES, plan_model
+from repro.gnn.models import ZooSpec
+from repro.kernels.registry import KernelBackend
+from repro.tune.measure import Measurement, measure_plan
+from repro.tune.search import candidate_plans, layer_config, plan_digest
+from repro.tune.store import (TUNER_VERSION, TuneRecord, clear_tune_cache,
+                              count_measurements, load_record, save_record,
+                              tune_cache_stats, tune_key, tune_scope)
+
+__all__ = [
+    "autotune_plan", "candidate_plans", "measure_plan",
+    "Measurement", "TuneRecord", "TUNER_VERSION",
+    "tune_cache_stats", "clear_tune_cache", "tune_key", "tune_scope",
+    "layer_config", "plan_digest",
+]
+
+
+def autotune_plan(spec: ZooSpec, edges: np.ndarray, num_nodes: int, *,
+                  backend: KernelBackend, features=None, params: dict | None = None,
+                  platform: Platform = GNNERATOR, max_n: int = 1024,
+                  block_candidates: tuple[int, ...] = _BLOCK_CANDIDATES,
+                  budget: int = 16, top_k: int = 4, seed: int = 0,
+                  warmup: int = 1, reps: int = 3,
+                  timeout_s: float | None = 30.0,
+                  cache_dir=None, store=None, graph_key=None) -> TuneRecord:
+    """Pick the measured-fastest ModelPlan for (spec, graph, backend).
+
+    Args:
+      spec / edges / num_nodes: the model and graph to tune for.
+      backend: the *resolved* kernel backend candidates run on (its name
+        is part of the winner-store key).
+      features: (N, F) node features; synthesized (seeded, f32) when the
+        graph is featureless — timing needs realistic shapes, not values.
+      params: parameter pytree to run with; initialized from ``seed``
+        when None.
+      budget: max candidate plans measured, analytic plan included.
+        ``budget <= 0`` skips measurement entirely and returns the
+        analytic plan (``plan_source="analytic_fallback"``).
+      top_k: per-layer analytic rank depth the search explores.
+      seed: keys the run (and any synthesized features/params) — part of
+        the memo key, so (arch, graph, budget, seed) is deterministic.
+      warmup / reps / timeout_s: measurement protocol per candidate
+        (see :func:`repro.tune.measure.measure_plan`).
+      cache_dir: winner-store directory (default: ``REPRO_PLAN_CACHE``).
+      store: GraphStore the candidates' sharded builds go through
+        (default: the module-wide runtime store).
+      graph_key: cache key naming the graph contents for ``store``.
+
+    Returns the memoized :class:`~repro.tune.store.TuneRecord`; repeat
+    calls with the same key re-measure nothing.
+    """
+    from repro.runtime.cache import default_store
+
+    analytic = plan_model(spec, num_nodes, int(edges.shape[0]),
+                          platform=platform, max_n=max_n,
+                          block_candidates=block_candidates,
+                          cache_dir=cache_dir)
+    if budget <= 0:
+        return TuneRecord(plan=analytic, plan_source="analytic_fallback",
+                          winner_ms=None, analytic_ms=None, speedup=None,
+                          candidates=(), scope=tune_scope(backend.name))
+
+    key = tune_key(spec, num_nodes, int(edges.shape[0]), platform=platform,
+                   max_n=max_n, block_candidates=block_candidates,
+                   backend_name=backend.name, budget=budget, seed=seed,
+                   reps=reps, warmup=warmup)
+    rec = load_record(key, cache_dir)
+    if rec is not None:
+        return rec
+
+    import jax
+
+    if features is None:
+        rng = np.random.default_rng(seed)
+        features = rng.standard_normal(
+            (num_nodes, spec.in_dim), dtype=np.float32)
+    if params is None:
+        from repro.gnn.models import init_zoo
+        params = init_zoo(jax.random.key(seed), spec)
+    if store is None:
+        store = default_store()
+    if graph_key is None:
+        from repro.runtime.api import graph_fingerprint
+        graph_key = graph_fingerprint(edges, num_nodes, features)
+
+    cands = candidate_plans(spec, num_nodes, int(edges.shape[0]),
+                            analytic=analytic, platform=platform,
+                            max_n=max_n, block_candidates=block_candidates,
+                            top_k=top_k, budget=budget)
+    measured: list[tuple[Measurement, object]] = []
+    for plan in cands:
+        m = measure_plan(spec, plan, backend=backend, edges=edges,
+                         num_nodes=num_nodes, features=features,
+                         params=params, store=store, graph_key=graph_key,
+                         warmup=warmup, reps=reps, timeout_s=timeout_s)
+        measured.append((m, plan))
+    count_measurements(len(measured))
+
+    ok = [(m, p) for m, p in measured if m.status == "ok"]
+    analytic_digest = plan_digest(analytic)
+    analytic_ms = next((m.median_ms for m, _ in ok
+                        if m.digest == analytic_digest), None)
+    if ok:
+        win_m, win_p = min(ok, key=lambda mp: mp[0].median_ms)
+        speedup = (round(analytic_ms / win_m.median_ms, 4)
+                   if analytic_ms else None)
+        rec = TuneRecord(plan=win_p, plan_source="autotune",
+                         winner_ms=round(win_m.median_ms, 4),
+                         analytic_ms=(round(analytic_ms, 4)
+                                      if analytic_ms else None),
+                         speedup=speedup,
+                         candidates=tuple(m for m, _ in measured),
+                         scope=tune_scope(backend.name))
+    else:
+        # every candidate failed (including the analytic plan): serve the
+        # analytic plan anyway — it's the only choice that needs no
+        # measurement to justify — and record why
+        rec = TuneRecord(plan=analytic, plan_source="analytic_fallback",
+                         winner_ms=None, analytic_ms=None, speedup=None,
+                         candidates=tuple(m for m, _ in measured),
+                         scope=tune_scope(backend.name))
+    save_record(key, rec, cache_dir)
+    return rec

@@ -1,0 +1,101 @@
+"""Measurement harness: time candidate plans on the real kernel backend.
+
+One candidate = one :class:`~repro.runtime.executable.Executable` built
+with an explicitly chosen :class:`~repro.gnn.executor.ModelPlan` (instead
+of the analytic planner's pick) and timed on the full-graph forward — the
+serving/training unit of work. The protocol per candidate:
+
+  * **warm-up** — one untimed-for-score run that pays jit trace +
+    backend compile; its wall time doubles as the timeout probe,
+  * **median-of-k** — ``reps`` timed runs (``jax.block_until_ready``
+    bracketed), scored by the median so one scheduler hiccup can't crown
+    the wrong winner,
+  * **guards** — a candidate that raises (XLA OOM, kernel shape error,
+    anything) or whose warm-up blows the per-candidate timeout is
+    recorded with its failure and *skipped*; the search never crashes.
+
+Graph tensors are pulled through the caller's
+:class:`~repro.runtime.cache.GraphStore`, so candidates that agree on
+``shard_n`` share one sharded build (and the winner's build is already
+resident when ``runtime.compile`` finishes up).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.gnn.executor import ModelPlan
+from repro.gnn.models import ZooSpec
+from repro.kernels.registry import KernelBackend
+from repro.runtime.cache import GraphStore
+from repro.tune.search import layer_config, plan_digest
+
+
+@dataclasses.dataclass
+class Measurement:
+    """One candidate's timing record (also what the winner store persists)."""
+
+    digest: str                      # executed-config hash (search.plan_digest)
+    config: list[dict]               # per-layer {B, n, S, order, fused}
+    status: str                      # "ok" | "error" | "timeout"
+    median_ms: float | None = None   # median of the timed reps
+    reps_ms: tuple[float, ...] = ()
+    warmup_ms: float | None = None   # jit trace + backend compile + run
+    error: str | None = None
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Measurement":
+        d = dict(d)
+        d["reps_ms"] = tuple(d.get("reps_ms", ()))
+        return cls(**d)
+
+
+def measure_plan(spec: ZooSpec, plan: ModelPlan, *, backend: KernelBackend,
+                 edges: np.ndarray, num_nodes: int, features,
+                 params: dict, store: GraphStore, graph_key,
+                 warmup: int = 1, reps: int = 3,
+                 timeout_s: float | None = 30.0) -> Measurement:
+    """Time one candidate plan; never raises (see module docstring)."""
+    import jax
+
+    from repro.runtime.executable import Executable
+
+    digest = plan_digest(plan)
+    config = [layer_config(p) for p in plan.layers]
+    try:
+        entry = store.get(graph_key, edges, num_nodes, plan.shard_n,
+                          spec.arch, features=features)
+        exe = Executable(spec=spec, plan=plan, backend=backend, gt=entry.gt,
+                         h_grouped=entry.h_grouped, params=params,
+                         graph_key=graph_key)
+        t0 = time.perf_counter()
+        for _ in range(max(warmup, 1)):
+            jax.block_until_ready(exe.forward())
+        warmup_ms = (time.perf_counter() - t0) * 1e3
+        # the warm-up run doubles as the timeout probe: a candidate whose
+        # compiled forward already blows the per-candidate budget is not
+        # worth reps (jax computations can't be interrupted mid-flight, so
+        # probing is the only timeout that doesn't leak a wedged search)
+        if timeout_s is not None and warmup_ms > timeout_s * 1e3:
+            return Measurement(digest=digest, config=config,
+                               status="timeout", warmup_ms=warmup_ms,
+                               error=f"warm-up {warmup_ms:.0f} ms exceeded "
+                                     f"the {timeout_s:g} s candidate budget")
+        reps_ms = []
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(exe.forward())
+            reps_ms.append((time.perf_counter() - t0) * 1e3)
+        return Measurement(digest=digest, config=config, status="ok",
+                           median_ms=float(np.median(reps_ms)),
+                           reps_ms=tuple(round(m, 4) for m in reps_ms),
+                           warmup_ms=round(warmup_ms, 4))
+    except Exception as err:   # noqa: BLE001 — OOM/XLA/shape errors all land
+        # here; a failing candidate is a *data point*, not a crash
+        return Measurement(digest=digest, config=config, status="error",
+                           error=f"{type(err).__name__}: {err}")
