@@ -1,0 +1,93 @@
+"""repro.analyze — static analysis over the artifacts the stack produces.
+
+Five passes, each decidable before (or at) compile time, long before a
+bad config burns a measurement timeout or a hot-path sync backs a queue
+up:
+
+  * **retrace**   — jitted entry points must trace once and serve
+    forever (:mod:`repro.analyze.jaxpr_lint`, plus the ``jax.jit``-in-
+    loop source rule in :mod:`repro.analyze.ast_lint`);
+  * **dtype**     — jaxpr walk for f64 promotion, weak-typed entry
+    arguments, int32-overflow-scale arrays (:mod:`.jaxpr_lint`);
+  * **host-sync** — AST lint forbidding device→host syncs in the
+    serving/runtime/kernels hot paths (:mod:`.ast_lint`);
+  * **plan**      — LayerPlan/candidate legality + static pruning for
+    the autotuner (:mod:`.plan_lint`);
+  * **comm**      — compiled-HLO collective bytes vs the PartitionPlan
+    model for any mesh compile (:mod:`.hlo_lint`).
+
+Entry points: :func:`analyze_executable` (what
+``runtime.compile(analyze=...)`` calls), :func:`preflight` (what
+``Server.start(analyze=...)`` calls), and the ``python -m
+repro.launch.analyze`` CLI that runs everything over the repo as the CI
+gate.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.analyze import ast_lint, hlo_lint, jaxpr_lint, plan_lint
+from repro.analyze.report import (PASSES, SEVERITIES, AnalysisError, Finding,
+                                  Report, severity_rank)
+
+__all__ = [
+    "Finding", "Report", "AnalysisError", "SEVERITIES", "PASSES",
+    "severity_rank", "analyze_executable", "preflight",
+    "ast_lint", "jaxpr_lint", "plan_lint", "hlo_lint",
+]
+
+
+def analyze_executable(exe, *, probe: bool = False,
+                       rtol: float = 0.02) -> Report:
+    """All compile-time passes over one compiled Executable.
+
+    ``probe`` additionally drives the jitted entry points (full-graph
+    forward twice, node batches across pad buckets) and reads the jit
+    trace caches — a real dynamic retrace oracle, at the cost of real
+    forwards. The host-sync pass is source-level and repo-wide, so it
+    runs in the CLI/CI gate, not per compile.
+    """
+    report = Report()
+
+    t0 = time.perf_counter()
+    report.extend(jaxpr_lint.check_executable(exe, probe=probe))
+    report.timings_ms["retrace+dtype"] = (time.perf_counter() - t0) * 1e3
+
+    t0 = time.perf_counter()
+    report.extend(plan_lint.check_model_plan(
+        exe.plan, backend_name=exe.backend_name))
+    report.timings_ms["plan"] = (time.perf_counter() - t0) * 1e3
+
+    if hasattr(exe, "comm_stats"):
+        t0 = time.perf_counter()
+        report.extend(hlo_lint.check_sharded_executable(exe, rtol=rtol))
+        report.timings_ms["comm"] = (time.perf_counter() - t0) * 1e3
+    else:
+        report.skipped["comm"] = \
+            "single-device compile (no mesh): nothing on the wire"
+    report.skipped["host-sync"] = \
+        "source-level pass; run `python -m repro.launch.analyze`"
+    return report
+
+
+def preflight(engine=None, *, probe: bool = False,
+              rtol: float = 0.02) -> Report:
+    """Serving-startup analysis: host-sync lint over the deployed hot
+    paths, plus every pass over each Executable the engine has already
+    compiled (GNN engines compile lazily — pairs compiled after startup
+    are covered by ``runtime.compile(analyze=...)``)."""
+    report = Report()
+    t0 = time.perf_counter()
+    report.extend(ast_lint.lint_hot_paths())
+    report.timings_ms["host-sync"] = (time.perf_counter() - t0) * 1e3
+
+    exes = getattr(engine, "_executables", None)
+    if exes:
+        for exe in list(exes.values()):
+            report.merge(analyze_executable(exe, probe=probe, rtol=rtol))
+        # per-exe host-sync skip notes are superseded: the pass ran above
+        report.skipped.pop("host-sync", None)
+    elif engine is not None:
+        report.skipped["plan"] = report.skipped["retrace"] = \
+            "no compiled executables yet (engine compiles lazily)"
+    return report

@@ -1,0 +1,214 @@
+"""Host-sync lint: AST pass forbidding device→host syncs in hot paths.
+
+A serving or training hot path must never silently block on device
+values: ``.item()``, ``float(jnp.max(...))``, ``np.asarray(device_arr)``
+and ``block_until_ready`` each stall the dispatch pipeline for a full
+device round trip — the difference between a queue that drains and one
+that backs up. The measurement harness (``tune/measure.py``) and the
+benchmarks do this *on purpose* (timing needs a fence), so they are
+allow-listed; anything else under ``serving/``, ``runtime/`` and
+``kernels/`` is a finding.
+
+Rules:
+
+  * **HS001** (error)   — ``x.item()``: per-element device sync.
+  * **HS002** (error)   — ``jax.block_until_ready(x)`` /
+    ``x.block_until_ready()``: an explicit fence outside a benchmark.
+  * **HS003** (warning) — ``float(...)`` / ``int(...)`` / ``bool(...)``
+    around a jnp/jax reduction call (``jnp.max``, ``jnp.sum``, …): pulls
+    a scalar off the device. (``float(jnp.finfo(...).max)`` and other
+    metadata accessors are *not* flagged — only array-producing ops.)
+  * **HS004** (warning) — ``jax.device_get(...)`` or
+    ``np.asarray(<jnp/jax call>)``: whole-array device→host transfer.
+  * **RT101** (error)   — ``jax.jit(...)`` inside a ``for``/``while``
+    body: every iteration builds a fresh jitted callable with an empty
+    cache, i.e. a guaranteed per-iteration retrace. (Reported under the
+    retrace pass; it is a *source* pattern, so it lives with the AST
+    walker.)
+
+Suppression: a comment containing ``analyze: allow(HS004)`` (or
+``allow(host-sync)`` for the whole pass) on the offending line.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+
+from repro.analyze.report import Finding
+
+PASS = "host-sync"
+
+# jnp/jax array-producing reductions whose float()/int() coercion is a
+# device sync; metadata helpers (finfo, iinfo, shape, ndim, size) are not
+_REDUCTIONS = frozenset({
+    "max", "min", "sum", "mean", "prod", "argmax", "argmin", "all", "any",
+    "median", "norm", "dot", "vdot", "count_nonzero", "nanmax", "nanmin",
+    "nansum", "nanmean",
+})
+
+# module aliases treated as "the jax family" when they head an attribute
+# chain: jnp.max(...), jax.numpy.max(...), jax.lax.reduce(...)
+_JAX_ROOTS = frozenset({"jnp", "jax", "lax"})
+
+# hot-path packages, relative to src/repro
+HOT_PATHS = ("serving", "runtime", "kernels")
+
+# path substrings exempt from the pass (measurement needs fences)
+DEFAULT_ALLOW = ("tune/measure.py", "benchmarks/")
+
+_ALLOW_RE = re.compile(r"analyze:\s*allow\(([A-Za-z0-9_,\s-]+)\)")
+
+
+def _suppressed(source_line: str, rule: str, pass_name: str) -> bool:
+    m = _ALLOW_RE.search(source_line)
+    if not m:
+        return False
+    tokens = {t.strip() for t in m.group(1).split(",")}
+    return rule in tokens or pass_name in tokens
+
+
+def _attr_chain(node: ast.AST) -> list[str]:
+    """['jax', 'numpy', 'max'] for jax.numpy.max; [] when not a chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    else:
+        return []
+    return parts[::-1]
+
+
+def _is_jax_reduction_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    chain = _attr_chain(node.func)
+    return (len(chain) >= 2 and chain[0] in _JAX_ROOTS
+            and chain[-1] in _REDUCTIONS)
+
+
+def _contains_jax_call(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            chain = _attr_chain(sub.func)
+            if chain and chain[0] in _JAX_ROOTS:
+                return True
+    return False
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, lines: list[str]):
+        self.path = path
+        self.lines = lines
+        self.findings: list[Finding] = []
+        self._loop_depth = 0
+
+    def _emit(self, rule: str, severity: str, node: ast.AST, msg: str,
+              pass_name: str = PASS) -> None:
+        line = self.lines[node.lineno - 1] if \
+            0 < node.lineno <= len(self.lines) else ""
+        if _suppressed(line, rule, pass_name):
+            return
+        self.findings.append(Finding(
+            rule=rule, severity=severity, pass_name=pass_name, message=msg,
+            location=f"{self.path}:{node.lineno}"))
+
+    # -- loops gate RT101 --------------------------------------------------
+
+    def visit_For(self, node):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    def visit_While(self, node):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    # -- calls -------------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call):
+        chain = _attr_chain(node.func)
+
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr == "item" and not node.args:
+                self._emit("HS001", "error", node,
+                           ".item() forces a per-element device sync; "
+                           "batch the transfer (device_get once) outside "
+                           "the hot path")
+            if node.func.attr == "block_until_ready":
+                self._emit("HS002", "error", node,
+                           "block_until_ready is a device fence; only "
+                           "measurement harnesses may block the hot path")
+
+        if chain[-1:] == ["device_get"] and chain[0] in _JAX_ROOTS:
+            self._emit("HS004", "warning", node,
+                       "jax.device_get transfers the whole array to host; "
+                       "keep hot-path values on device (or annotate the "
+                       "deliberate materialization point)")
+
+        if isinstance(node.func, ast.Name) and \
+                node.func.id in ("float", "int", "bool") and node.args:
+            if _is_jax_reduction_call(node.args[0]):
+                self._emit("HS003", "warning", node,
+                           f"{node.func.id}() around a device reduction "
+                           f"syncs per call; hoist to host data or keep "
+                           f"the comparison on device")
+
+        if chain[-2:] == ["np", "asarray"] or chain[-2:] == ["np", "array"]:
+            if node.args and _contains_jax_call(node.args[0]):
+                self._emit("HS004", "warning", node,
+                           "np.asarray over a jax expression is a hidden "
+                           "device→host transfer")
+
+        if chain == ["jax", "jit"] and self._loop_depth > 0:
+            self._emit("RT101", "error", node,
+                       "jax.jit inside a loop body builds a fresh callable "
+                       "(empty cache) every iteration — a guaranteed "
+                       "retrace; hoist the jit outside the loop",
+                       pass_name="retrace")
+
+        self.generic_visit(node)
+
+
+def lint_source(source: str, path: str = "<string>") -> list[Finding]:
+    """Lint one module's source text. Syntax errors are reported as a
+    finding (the analyzer must not crash on a broken tree)."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as err:
+        return [Finding(rule="HS000", severity="error", pass_name=PASS,
+                        message=f"unparseable module: {err}",
+                        location=f"{path}:{err.lineno or 0}")]
+    v = _Visitor(path, source.splitlines())
+    v.visit(tree)
+    return v.findings
+
+
+def lint_paths(roots, *, allow=DEFAULT_ALLOW,
+               repo_root: pathlib.Path | None = None) -> list[Finding]:
+    """Lint every ``.py`` file under ``roots`` (files or directories),
+    skipping paths whose POSIX form contains an ``allow`` substring."""
+    out: list[Finding] = []
+    for root in roots:
+        root = pathlib.Path(root)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            posix = f.as_posix()
+            if any(a in posix for a in allow):
+                continue
+            rel = (f.relative_to(repo_root).as_posix()
+                   if repo_root and f.is_relative_to(repo_root) else posix)
+            out.extend(lint_source(f.read_text(), rel))
+    return out
+
+
+def lint_hot_paths(src_repro: pathlib.Path | None = None) -> list[Finding]:
+    """Lint the serving/runtime/kernels hot paths of this checkout."""
+    if src_repro is None:
+        src_repro = pathlib.Path(__file__).resolve().parent.parent
+    roots = [src_repro / p for p in HOT_PATHS]
+    return lint_paths([r for r in roots if r.exists()],
+                      repo_root=src_repro.parent.parent)

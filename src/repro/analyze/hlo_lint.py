@@ -1,0 +1,112 @@
+"""Comm-contract audit: compiled-HLO collectives vs the partition model.
+
+PR 4 proved the sharded GNN's per-layer all-gathers can be *measured*
+from compiled HLO text (:func:`repro.dist.hlo_analysis.analyze_collectives`)
+and PAPERS.md's UPC communication-requirements model shows the same
+quantity is *derivable* from the partition plan. This pass closes the
+loop as a compile-time check for any mesh compile: the measured wire
+bytes must match the model, and the model must agree with the
+PartitionPlan's independent derivation — drift on either side is a
+finding, not a mystery slowdown three benchmarks later.
+
+Rules:
+
+  * **CC001** (error)   — measured all-gather wire bytes disagree with
+    the analytic per-layer model beyond ``rtol``: the compiled program
+    moves more (or less) data than the plan accounts for.
+  * **CC002** (error)   — the PartitionPlan's broadcast model disagrees
+    with the analytic model: the two derivations of the same quantity
+    have drifted (a modeling bug, not a compiler one).
+  * **CC003** (warning) — the program contains collective kinds the
+    contract does not model (anything beyond the layer all-gathers and
+    the model-axis psum/all-reduce): unaccounted wire traffic.
+  * **CC004** (info)    — no collectives at all while none are expected
+    (degenerate 1-device mesh): the contract is vacuously satisfied.
+"""
+from __future__ import annotations
+
+from repro.analyze.report import Finding
+from repro.dist.hlo_analysis import CollectiveStats
+
+PASS = "comm"
+
+# collective kinds the sharded-GNN contract accounts for: the per-layer
+# feature all-gathers (data axis) and the row-parallel psum reductions
+# (model axis; psum lowers to all-reduce)
+MODELED_KINDS = frozenset({"all-gather", "all-reduce"})
+
+
+def check_comm_contract(stats: CollectiveStats, *,
+                        expected_allgather_bytes: float,
+                        plan_allgather_bytes: float | None = None,
+                        rtol: float = 0.02,
+                        location: str = "") -> list[Finding]:
+    """Findings for one compiled module's collective traffic vs the
+    contract (see module docstring). Pure over parsed stats — testable
+    without a mesh."""
+    out: list[Finding] = []
+    measured = stats.wire_bytes.get("all-gather", 0.0)
+    expected = float(expected_allgather_bytes)
+    tol = rtol * max(expected, 1.0)
+
+    if abs(measured - expected) > tol:
+        out.append(Finding(
+            rule="CC001", severity="error", pass_name=PASS,
+            message=f"measured all-gather wire bytes "
+                    f"{measured:,.0f} != modeled {expected:,.0f} "
+                    f"(tolerance {tol:,.0f}); the compiled program and "
+                    f"the comm model disagree",
+            location=location))
+    if plan_allgather_bytes is not None and \
+            abs(float(plan_allgather_bytes) - expected) > tol:
+        out.append(Finding(
+            rule="CC002", severity="error", pass_name=PASS,
+            message=f"PartitionPlan broadcast model "
+                    f"{float(plan_allgather_bytes):,.0f} bytes != analytic "
+                    f"per-layer model {expected:,.0f} (tolerance "
+                    f"{tol:,.0f}); the two derivations drifted",
+            location=location))
+    unmodeled = sorted(set(stats.counts) - MODELED_KINDS)
+    if unmodeled:
+        extra = sum(stats.wire_bytes.get(k, 0.0) for k in unmodeled)
+        out.append(Finding(
+            rule="CC003", severity="warning", pass_name=PASS,
+            message=f"unmodeled collective kinds {unmodeled} put "
+                    f"{extra:,.0f} wire bytes on the interconnect outside "
+                    f"the contract",
+            location=location))
+    if not stats.counts and expected == 0.0:
+        out.append(Finding(
+            rule="CC004", severity="info", pass_name=PASS,
+            message="no collectives in the compiled module and none "
+                    "expected (1-device mesh): contract vacuously holds",
+            location=location))
+    return out
+
+
+def check_comm_stats(cs: dict, *, rtol: float = 0.02,
+                     location: str = "") -> list[Finding]:
+    """The contract over an already-computed
+    :meth:`repro.dist.gnn.ShardedExecutable.comm_stats` dict (the stats
+    computation lowers + compiles the module, so callers that already
+    hold one should not pay it twice)."""
+    stats = CollectiveStats(
+        operand_bytes={}, wire_bytes=dict(cs["measured_wire_bytes"]),
+        counts=dict(cs["measured_counts"]))
+    return check_comm_contract(
+        stats,
+        expected_allgather_bytes=cs["expected_allgather_wire_bytes"],
+        plan_allgather_bytes=sum(
+            cs["plan_allgather_bytes_per_layer"].values()),
+        rtol=rtol, location=location)
+
+
+def check_sharded_executable(exe, *, rtol: float = 0.02) -> list[Finding]:
+    """Run the contract over a compiled
+    :class:`repro.dist.gnn.ShardedExecutable` using its own
+    :meth:`comm_stats` accounting."""
+    cs = exe.comm_stats()
+    return check_comm_stats(
+        cs, rtol=rtol,
+        location=f"ShardedExecutable[{exe.spec.arch}] "
+                 f"data={cs['n_data']} model={cs['n_model']}")

@@ -1,0 +1,239 @@
+"""Retrace + dtype-drift passes over jitted entry points and their jaxprs.
+
+**Retrace pass.** A production jit entry point must trace once and serve
+forever; every extra trace is seconds of XLA compile charged to some
+unlucky request. The static halves of the pass flag the *causes*
+(Python-scalar pytree leaves → weak-typed tracers that retrace when a
+typed value arrives; ``jax.jit`` built inside a loop — see
+``ast_lint.RT101``); the dynamic half (:func:`trace_stability`) is the
+*oracle*: drive the entry point with a representative call sequence and
+read the jit cache size — anything above the expected trace count is a
+finding, whatever the cause.
+
+**Dtype pass.** Walks a jaxpr (sub-jaxprs included) for
+
+  * f64/c128 values — unintended x64 promotion doubles every buffer and
+    silently halves throughput on accelerators,
+  * weak-typed entry arguments — the Python-scalar signature that both
+    promotes dtypes *and* retraces when a typed array arrives,
+  * arrays beyond int32 element count — at reddit-scale node counts a
+    flattened int32 index (edge gathers, dense shard grids) wraps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analyze.report import Finding
+
+_INT32_MAX = 2 ** 31 - 1
+
+
+# --------------------------------------------------------------------------
+# retrace
+# --------------------------------------------------------------------------
+
+def cache_size(fn) -> int | None:
+    """Size of a jitted callable's trace cache; None when ``fn`` does not
+    expose one (not a jit wrapper)."""
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        return int(probe())
+    except Exception:   # pragma: no cover - defensive
+        return None
+
+
+def python_scalar_leaves(tree, *, name: str,
+                         pass_name: str = "retrace") -> list[Finding]:
+    """RT002: Python int/float/bool leaves in an argument pytree trace as
+    weak-typed values — the jit signature changes (and retraces) the
+    moment a caller passes a typed array instead, and the weak dtype can
+    promote everything it touches."""
+    out: list[Finding] = []
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    for i, leaf in enumerate(leaves):
+        if isinstance(leaf, (bool, int, float)) and \
+                not isinstance(leaf, np.generic):
+            out.append(Finding(
+                rule="RT002", severity="warning", pass_name=pass_name,
+                message=f"pytree leaf {i} is a Python "
+                        f"{type(leaf).__name__} ({leaf!r}); it traces "
+                        f"weak-typed and retraces when a typed array "
+                        f"arrives — wrap it in jnp.asarray with an "
+                        f"explicit dtype",
+                location=name))
+    return out
+
+
+def trace_stability(fn, calls, *, name: str,
+                    max_traces: int = 1) -> list[Finding]:
+    """RT003: drive a jitted ``fn`` with every args-tuple in ``calls``
+    and flag cache growth beyond ``max_traces`` — the dynamic retrace
+    oracle (shape-dependent rebinds, scalar closures, donation misses all
+    surface here regardless of cause)."""
+    before = cache_size(fn)
+    if before is None:
+        return [Finding(
+            rule="RT000", severity="info", pass_name="retrace",
+            message="entry point exposes no jit trace cache; retrace "
+                    "probe skipped", location=name)]
+    for args in calls:
+        jax.block_until_ready(fn(*args))
+    after = cache_size(fn)
+    if after is not None and after > max_traces:
+        return [Finding(
+            rule="RT003", severity="error", pass_name="retrace",
+            message=f"{len(calls)} same-spec calls produced {after} "
+                    f"traces (expected <= {max_traces}); a per-request "
+                    f"recompile is hiding in this entry point",
+            location=name)]
+    return []
+
+
+# --------------------------------------------------------------------------
+# dtype drift
+# --------------------------------------------------------------------------
+
+def _iter_sub_jaxprs(params: dict):
+    from jax.core import ClosedJaxpr, Jaxpr
+    for v in params.values():
+        vs = v if isinstance(v, (list, tuple)) else (v,)
+        for item in vs:
+            if isinstance(item, ClosedJaxpr):
+                yield item.jaxpr
+            elif isinstance(item, Jaxpr):
+                yield item
+
+
+def _walk_eqns(jaxpr, visit) -> None:
+    for eqn in jaxpr.eqns:
+        visit(eqn)
+        for sub in _iter_sub_jaxprs(eqn.params):
+            _walk_eqns(sub, visit)
+
+
+def _aval_of(var):
+    return getattr(var, "aval", None)
+
+
+def dtype_findings(closed_jaxpr, *, name: str,
+                   allow_f64: bool = False) -> list[Finding]:
+    """Walk one ClosedJaxpr for the dtype-drift rules (see module
+    docstring): DT001 f64/c128 values, DT002 weak-typed entry arguments,
+    DT003 arrays past int32 element count."""
+    out: list[Finding] = []
+    jaxpr = closed_jaxpr.jaxpr
+
+    for i, var in enumerate(jaxpr.invars):
+        aval = _aval_of(var)
+        if aval is None or not hasattr(aval, "dtype"):
+            continue
+        if getattr(aval, "weak_type", False):
+            out.append(Finding(
+                rule="DT002", severity="warning", pass_name="dtype",
+                message=f"entry argument {i} is weak-typed "
+                        f"({aval.dtype}); it came from a Python scalar "
+                        f"and will both promote dtypes and retrace when "
+                        f"a typed array is passed",
+                location=name))
+
+    seen_f64: set[str] = set()
+    seen_big: set[str] = set()
+
+    def visit(eqn):
+        prim = eqn.primitive.name
+        for var in (*eqn.invars, *eqn.outvars):
+            aval = _aval_of(var)
+            if aval is None or not hasattr(aval, "dtype"):
+                continue
+            dt = np.dtype(aval.dtype)
+            if not allow_f64 and dt in (np.dtype(np.float64),
+                                        np.dtype(np.complex128)) \
+                    and prim not in seen_f64:
+                seen_f64.add(prim)
+                out.append(Finding(
+                    rule="DT001", severity="error", pass_name="dtype",
+                    message=f"{dt} value flows through '{prim}' — "
+                            f"unintended x64 promotion doubles every "
+                            f"buffer it touches; pin the input dtype or "
+                            f"cast at the boundary",
+                    location=name))
+            shape = getattr(aval, "shape", ())
+            if shape and int(np.prod(shape, dtype=np.int64)) > _INT32_MAX \
+                    and prim not in seen_big:
+                seen_big.add(prim)
+                out.append(Finding(
+                    rule="DT003", severity="warning", pass_name="dtype",
+                    message=f"'{prim}' touches an array of "
+                            f"{int(np.prod(shape, dtype=np.int64)):,} "
+                            f"elements (> int32 max); flattened int32 "
+                            f"indexing (edge gathers, dense shard grids) "
+                            f"wraps at this scale — use int64 indices or "
+                            f"shard the tensor",
+                    location=name))
+
+    _walk_eqns(jaxpr, visit)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Executable-level entry
+# --------------------------------------------------------------------------
+
+def _forward_avals(exe):
+    """(params-avals, h-aval) matching one compiled Executable."""
+    p_avals = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+        exe.params)
+    h = exe._h_grouped
+    if h is not None:
+        h_aval = jax.ShapeDtypeStruct(jnp.shape(h), jnp.result_type(h))
+    else:
+        h_aval = jax.ShapeDtypeStruct(
+            (exe.gt.S, exe.gt.n, exe.spec.in_dim), jnp.float32)
+    return p_avals, h_aval
+
+
+def check_executable(exe, *, probe: bool = False,
+                     batch_sizes=(1, 2, 3, 5, 7)) -> list[Finding]:
+    """Static (always) + dynamic (``probe=True``) analysis of one
+    compiled :class:`~repro.runtime.executable.Executable`:
+
+      * RT002 over the parameter pytree (scalar leaves),
+      * DT001/2/3 over the traced forward jaxpr (abstract avals — no
+        device work, no memory for the activations),
+      * with ``probe``: RT003 trace-stability of the jitted forward
+        (repeat full-graph calls must not add traces) and of the
+        node-batch gather (varying batch sizes within one pad bucket
+        must share one trace).
+    """
+    name = f"Executable[{exe.spec.arch}]"
+    out = python_scalar_leaves(exe.params, name=f"{name}.params")
+
+    p_avals, h_aval = _forward_avals(exe)
+    closed = jax.make_jaxpr(exe._forward_fn())(p_avals, h_aval)
+    out.extend(dtype_findings(closed, name=f"{name}.forward"))
+
+    if probe and exe._h_grouped is not None:
+        out.extend(trace_stability(
+            exe._jit_forward, [(exe.params, exe._h_grouped)] * 2,
+            name=f"{name}.forward"))
+        # node-batch path: distinct batch sizes inside one pad bucket
+        # must not add gather traces (the PR-7 serving retrace fix)
+        n = exe.gt.num_nodes
+        for k in batch_sizes:
+            exe.forward_nodes(np.arange(min(k, n)))
+        gather_traces = cache_size(exe._jit_gather)
+        buckets = len({exe._gather_bucket(min(k, n))
+                       for k in batch_sizes})
+        if gather_traces is not None and gather_traces > buckets:
+            out.append(Finding(
+                rule="RT003", severity="error", pass_name="retrace",
+                message=f"node-batch gather traced {gather_traces}x for "
+                        f"{buckets} pad bucket(s) — per-batch-shape "
+                        f"recompiles are back",
+                location=f"{name}.forward_nodes"))
+    return out

@@ -232,14 +232,15 @@ class ShardedExecutable(Executable):
         """Assert the measured all-gather volume matches both the analytic
         per-layer model and the PartitionPlan's broadcast model (same
         quantity derived from the plan instead of the program — catching
-        drift on either side). Returns :meth:`comm_stats`."""
+        drift on either side). The check itself is the comm-contract
+        pass (:func:`repro.analyze.hlo_lint.check_sharded_executable`) —
+        this wrapper turns its error findings into an AssertionError.
+        Returns :meth:`comm_stats`."""
+        from repro.analyze.hlo_lint import check_comm_stats
         cs = self.comm_stats()
-        measured = cs["measured_allgather_wire_bytes"]
-        expected = cs["expected_allgather_wire_bytes"]
-        plan_total = sum(cs["plan_allgather_bytes_per_layer"].values())
-        tol = rtol * max(expected, 1.0)
-        assert abs(measured - expected) <= tol, (measured, expected)
-        assert abs(plan_total - expected) <= tol, (plan_total, expected)
+        findings = check_comm_stats(cs, rtol=rtol)
+        errors = [f for f in findings if f.severity == "error"]
+        assert not errors, "\n".join(f.render() for f in errors)
         return cs
 
     # -- introspection -----------------------------------------------------

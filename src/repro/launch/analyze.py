@@ -1,0 +1,173 @@
+"""Static-analysis CLI: run every repro.analyze pass over the repo.
+
+The CI gate::
+
+    python -m repro.launch.analyze --fail-on error
+
+What runs (all on scaled-down Table-II graphs so the gate stays fast):
+
+  * **host-sync** — AST lint over the serving/runtime/kernels hot paths;
+  * **plan**      — legality of the analytic ModelPlan for every zoo
+    arch x Table-II dataset against the chosen backend's budget;
+  * **retrace** / **dtype** — a compiled gcn Executable's jaxprs, plus
+    (with ``--probe``, the default) live trace-stability of the jitted
+    forward, the bucketed node-batch gather, and the ``runtime.fit``
+    train step;
+  * **comm**      — a sharded compile on a (data, model) mesh when >= 2
+    devices are visible (CI forces 8 virtual host devices), recorded as
+    an explicit skip otherwise.
+
+Exit status is 1 when any finding reaches ``--fail-on`` severity
+(``never`` disables the gate); ``--json`` emits the machine-readable
+report for tooling.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+from repro.analyze import (Report, analyze_executable, ast_lint,
+                           jaxpr_lint, plan_lint)
+from repro.gnn.models import ARCHS, ZooSpec
+from repro.graphs.datasets import TABLE2_DATASETS, make_dataset
+
+# keeps every Table-II profile multi-shard but compile times in seconds
+_SCALE = {"cora": 0.05, "citeseer": 0.02, "pubmed": 0.01}
+
+
+def _spec_for(ds, arch: str, hidden: int = 8) -> ZooSpec:
+    return ZooSpec(arch, ds.profile.feature_dim, hidden,
+                   ds.profile.num_classes, num_layers=2)
+
+
+def _plan_pass(report: Report, backend: str, max_n: int) -> None:
+    from repro.gnn.executor import plan_model
+
+    t0 = time.perf_counter()
+    for name in sorted(TABLE2_DATASETS):
+        ds = make_dataset(name, seed=0, scale=_SCALE[name])
+        for arch in ARCHS:
+            spec = _spec_for(ds, arch)
+            plan = plan_model(spec, ds.profile.num_nodes,
+                              ds.edges.shape[0], max_n=max_n)
+            for f in plan_lint.check_model_plan(plan, backend_name=backend):
+                report.add(dataclasses.replace(
+                    f, location=f"{name}/{f.location}"))
+    report.timings_ms["plan"] = (time.perf_counter() - t0) * 1e3
+
+
+def _executable_pass(report: Report, backend: str, max_n: int,
+                     probe: bool) -> None:
+    from repro import runtime
+
+    t0 = time.perf_counter()
+    ds = make_dataset("cora", seed=0, scale=_SCALE["cora"])
+    exe = runtime.compile(_spec_for(ds, "gcn"), ds, backend=backend,
+                          max_shard_n=max_n)
+    sub = analyze_executable(exe, probe=probe)
+    sub.skipped.pop("host-sync", None)   # runs for real in main()
+    sub.skipped.pop("comm", None)        # _comm_pass runs/records its own
+    sub.timings_ms.clear()               # charged to this wall-clock below
+    report.merge(sub)
+    report.timings_ms["retrace+dtype"] = (time.perf_counter() - t0) * 1e3
+
+
+def _fit_pass(report: Report, backend: str, max_n: int) -> None:
+    """Trace-stability of the jitted train step: a short real fit must
+    leave exactly one trace in the step cache."""
+    from repro import runtime
+
+    t0 = time.perf_counter()
+    ds = make_dataset("cora", seed=0, scale=_SCALE["cora"])
+    result = runtime.fit(_spec_for(ds, "gcn"), ds, steps=3,
+                         backend=backend, max_shard_n=max_n,
+                         log=lambda _msg: None)
+    traces = jaxpr_lint.cache_size(result.trainable._jit_step)
+    if traces is not None and traces > 1:
+        from repro.analyze.report import Finding
+        report.add(Finding(
+            rule="RT003", severity="error", pass_name="retrace",
+            message=f"3 full-batch train steps produced {traces} traces "
+                    f"(expected 1); the train step recompiles per call",
+            location="runtime.fit[gcn].step"))
+    report.timings_ms["fit-retrace"] = (time.perf_counter() - t0) * 1e3
+
+
+def _comm_pass(report: Report, backend: str, max_n: int,
+               rtol: float) -> None:
+    import jax
+
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        report.skipped["comm"] = (
+            f"{n_dev} visible device(s): the comm pass needs a mesh "
+            f"(CI sets XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return
+    from repro import runtime
+    from repro.analyze.hlo_lint import check_comm_stats
+    from repro.launch.mesh import make_mesh_for
+
+    t0 = time.perf_counter()
+    mesh = make_mesh_for(n_dev - n_dev % 2, model_parallel=2)
+    ds = make_dataset("cora", seed=0, scale=_SCALE["cora"])
+    exe = runtime.compile(_spec_for(ds, "gcn"), ds, backend=backend,
+                          max_shard_n=max_n, mesh=mesh)
+    cs = exe.comm_stats()
+    report.extend(check_comm_stats(
+        cs, rtol=rtol,
+        location=f"gcn data={cs['n_data']} model={cs['n_model']}"))
+    report.timings_ms["comm"] = (time.perf_counter() - t0) * 1e3
+
+
+def build_report(*, backend: str = "reference", max_n: int = 64,
+                 probe: bool = True, rtol: float = 0.02,
+                 fit_probe: bool = True) -> Report:
+    """Run every pass over this checkout (see module docstring)."""
+    report = Report()
+    t0 = time.perf_counter()
+    report.extend(ast_lint.lint_hot_paths())
+    report.timings_ms["host-sync"] = (time.perf_counter() - t0) * 1e3
+
+    _plan_pass(report, backend, max_n)
+    _executable_pass(report, backend, max_n, probe)
+    if fit_probe:
+        _fit_pass(report, backend, max_n)
+    _comm_pass(report, backend, max_n, rtol)
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="repro static-analysis gate (retrace, dtype, "
+                    "host-sync, plan legality, comm contract)")
+    ap.add_argument("--fail-on", default="error",
+                    choices=("error", "warning", "info", "never"),
+                    help="lowest severity that fails the gate "
+                         "(default: error; 'never' always exits 0)")
+    ap.add_argument("--backend", default="reference",
+                    help="kernel backend analyzed/compiled against "
+                         "(default: reference — CPU-fast)")
+    ap.add_argument("--max-shard-n", type=int, default=64,
+                    help="planner shard cap for the gate's tiny graphs")
+    ap.add_argument("--rtol", type=float, default=0.02,
+                    help="comm-contract relative tolerance")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the dynamic retrace probes (jit cache "
+                         "oracle over real forwards + a short fit)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable report")
+    args = ap.parse_args(argv)
+
+    report = build_report(backend=args.backend, max_n=args.max_shard_n,
+                          probe=not args.no_probe, rtol=args.rtol,
+                          fit_probe=not args.no_probe)
+    print(json.dumps(report.to_json(), indent=2) if args.json
+          else report.render())
+    return 1 if report.failed(args.fail_on) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -78,7 +78,8 @@ def compile(spec: ZooSpec, graph, *,
             tune_reps: int = 3,
             tune_warmup: int = 1,
             tune_timeout_s: float | None = 30.0,
-            plan_cache_dir=None) -> Executable:
+            plan_cache_dir=None,
+            analyze: str | None = None) -> Executable:
     """Plan, shard, initialize and jit one zoo model for one graph.
 
     Args:
@@ -115,10 +116,20 @@ def compile(spec: ZooSpec, graph, *,
         for ``plan="analytic"``.
       plan_cache_dir: persist/load plans (and autotuned winners) as JSON
         (default: env ``REPRO_PLAN_CACHE``).
+      analyze: run the compile-time static-analysis passes
+        (:func:`repro.analyze.analyze_executable` — retrace, dtype, plan
+        legality, comm contract on a mesh) over the compiled result.
+        ``None``/``"off"`` skips; ``"warn"`` attaches the report as
+        ``exe.analysis`` and emits a ``UserWarning`` for warning-or-worse
+        findings; ``"error"`` additionally raises
+        :class:`repro.analyze.AnalysisError` on any error finding.
     """
     if plan not in ("analytic", "autotune"):
         raise ValueError(f"plan must be 'analytic' or 'autotune', "
                          f"got {plan!r}")
+    if analyze not in (None, "off", "warn", "error"):
+        raise ValueError(f"analyze must be None, 'off', 'warn' or "
+                         f"'error', got {analyze!r}")
     edges, num_nodes, features = _as_graph(graph)
     # precedence per op: explicit op_backends > explicit backend arg >
     # REPRO_KERNEL_BACKEND_<OP> env > global env > default. An explicit
@@ -176,5 +187,19 @@ def compile(spec: ZooSpec, graph, *,
               plan_source=plan_source, tune_report=tune_report)
     if mesh is not None:
         from repro.dist.gnn import ShardedExecutable
-        return ShardedExecutable(mesh=mesh, **kw)
-    return Executable(**kw)
+        exe: Executable = ShardedExecutable(mesh=mesh, **kw)
+    else:
+        exe = Executable(**kw)
+
+    if analyze in ("warn", "error"):
+        from repro import analyze as _analyze
+        report = _analyze.analyze_executable(exe)
+        exe.analysis = report
+        if analyze == "error" and report.failed("error"):
+            raise _analyze.AnalysisError(report)
+        if report.at_least("warning"):
+            import warnings
+            warnings.warn(f"static analysis of the compiled "
+                          f"{spec.arch} executable:\n{report.render()}",
+                          stacklevel=2)
+    return exe

@@ -116,6 +116,8 @@ class Executable:
         # summary() so a serving operator can see WHY this config runs
         self.plan_source = plan_source
         self.tune_report = tune_report
+        # static-analysis Report, populated by runtime.compile(analyze=...)
+        self.analysis = None
         self._h_grouped = h_grouped
         self._probs: np.ndarray | None = None
 
@@ -126,6 +128,11 @@ class Executable:
         # passed per call (the cached buffer must survive repeat calls)
         self._jit_forward_donate = (
             jax.jit(fwd, donate_argnums=(1,)) if donate_features else None)
+        # node-batch gather, jitted over PADDED id vectors: ids arrive
+        # bucketed to a power of two (`_gather_bucket`), so arbitrary batch
+        # sizes share O(log max_batch) traces instead of one per distinct
+        # shape (the per-request dispatch-compile the retrace pass flags)
+        self._jit_gather = jax.jit(lambda logits, ids: logits[ids])
 
     def _forward_fn(self):
         """(params, h_grouped) -> (N, C) logits — the function jitted at
@@ -178,18 +185,38 @@ class Executable:
                     f"range [{lo}, {hi}]")
         return ids
 
+    @staticmethod
+    def _gather_bucket(k: int) -> int:
+        """Pad bucket for a node-batch gather: next power of two, floor 8,
+        so every batch size in a bucket reuses one gather trace."""
+        return max(8, 1 << max(k - 1, 0).bit_length())
+
     def forward_nodes(self, node_ids, params: dict | None = None) -> jax.Array:
-        """Node-batch logits (k, num_classes) for ``node_ids``."""
-        ids = jnp.asarray(self._check_node_ids(node_ids))
-        return self.forward(params)[ids]
+        """Node-batch logits (k, num_classes) for ``node_ids``.
+
+        Ids are padded to the enclosing power-of-two bucket before the
+        jitted gather: without the bucket, every distinct batch size is a
+        new gather shape and a new compile — the per-node-batch retrace
+        hazard ``repro.analyze``'s retrace pass exists to catch.
+        """
+        ids = self._check_node_ids(node_ids)
+        logits = self.forward(params)
+        k = int(ids.size)
+        if k == 0:
+            return logits[:0]
+        padded = np.zeros(self._gather_bucket(k), dtype=np.int32)
+        padded[:k] = ids
+        return self._jit_gather(logits, jnp.asarray(padded))[:k]
 
     def full_probs(self) -> np.ndarray:
         """Cached full-graph class probabilities (N, C); computed once per
         parameter set, then every node-batch request is a pure gather."""
         if self._probs is None:
             logits = self.forward()
-            self._probs = _softmax(
-                np.asarray(jax.device_get(logits), dtype=np.float32))
+            # the ONE deliberate materialization point: the softmax cache
+            # lives on host so every later request is a numpy gather
+            host = jax.device_get(logits)  # analyze: allow(host-sync)
+            self._probs = _softmax(np.asarray(host, dtype=np.float32))
         return self._probs
 
     def predict(self, node_ids) -> tuple[np.ndarray, np.ndarray]:
@@ -255,12 +282,14 @@ class Executable:
                 lines.append(
                     f"  autotune: winner {r['winner_ms']:.3f} ms "
                     f"{vs}{r['candidates_measured']} candidates, "
-                    f"{r['candidates_failed']} failed)")
+                    f"{r['candidates_failed']} failed, "
+                    f"{r.get('candidates_pruned', 0)} pruned)")
             else:
                 lines.append(
                     f"  autotune: analytic fallback "
                     f"({r['candidates_measured']} candidates, "
-                    f"{r['candidates_failed']} failed)")
+                    f"{r['candidates_failed']} failed, "
+                    f"{r.get('candidates_pruned', 0)} pruned)")
         lines.append(self.plan.summary())
         return "\n".join(lines)
 

@@ -290,8 +290,31 @@ class Server:
 
     # -- background driver (optional) --------------------------------------
 
-    def start(self, poll_interval_s: float = 0.002) -> "Server":
-        """Run a daemon driver thread so ``submit`` is fire-and-forget."""
+    def start(self, poll_interval_s: float = 0.002, *,
+              analyze: str | None = None) -> "Server":
+        """Run a daemon driver thread so ``submit`` is fire-and-forget.
+
+        ``analyze`` runs the static-analysis preflight
+        (:func:`repro.analyze.preflight` — host-sync lint over the
+        deployed hot paths plus every pass on each already-compiled
+        Executable) before the driver starts: ``"warn"`` emits a
+        ``UserWarning`` for warning-or-worse findings, ``"error"``
+        refuses to start (raises :class:`repro.analyze.AnalysisError`)
+        on any error finding — a misconfigured engine should fail at
+        startup, not stall the queue at peak.
+        """
+        if analyze not in (None, "off", "warn", "error"):
+            raise ValueError(f"analyze must be None, 'off', 'warn' or "
+                             f"'error', got {analyze!r}")
+        if analyze in ("warn", "error"):
+            from repro import analyze as _analyze
+            report = _analyze.preflight(self._engine)
+            if analyze == "error" and report.failed("error"):
+                raise _analyze.AnalysisError(report)
+            if report.at_least("warning"):
+                import warnings
+                warnings.warn(f"serving preflight analysis:\n"
+                              f"{report.render()}", stacklevel=2)
         if self._thread is None:
             self._stopping = False
             self._thread = threading.Thread(

@@ -108,9 +108,14 @@ class ServeEngine:
     def _sample(self, logits, requests, key):
         # logits: (B, V) or (B, C, V)
         greedy = jnp.argmax(logits, axis=-1)
-        temps = jnp.asarray([r.temperature for r in requests], jnp.float32)
-        if float(jnp.max(temps)) == 0.0:
+        # request temperatures are host data — deciding the greedy fast
+        # path on them must not round-trip a device reduction per decode
+        # step (float(jnp.max(...)) here was a per-token host sync)
+        temps_host = np.asarray([r.temperature for r in requests],
+                                np.float32)
+        if temps_host.max() == 0.0:
             return greedy.astype(jnp.int32)
+        temps = jnp.asarray(temps_host)
         t = jnp.maximum(temps, 1e-4)
         while t.ndim < logits.ndim - 1:
             t = t[:, None]

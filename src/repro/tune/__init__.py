@@ -110,10 +110,12 @@ def autotune_plan(spec: ZooSpec, edges: np.ndarray, num_nodes: int, *,
         from repro.runtime.api import graph_fingerprint
         graph_key = graph_fingerprint(edges, num_nodes, features)
 
+    pruned: list[dict] = []
     cands = candidate_plans(spec, num_nodes, int(edges.shape[0]),
                             analytic=analytic, platform=platform,
                             max_n=max_n, block_candidates=block_candidates,
-                            top_k=top_k, budget=budget)
+                            top_k=top_k, budget=budget,
+                            backend_name=backend.name, pruned_out=pruned)
     measured: list[tuple[Measurement, object]] = []
     for plan in cands:
         m = measure_plan(spec, plan, backend=backend, edges=edges,
@@ -137,7 +139,8 @@ def autotune_plan(spec: ZooSpec, edges: np.ndarray, num_nodes: int, *,
                                       if analytic_ms else None),
                          speedup=speedup,
                          candidates=tuple(m for m, _ in measured),
-                         scope=tune_scope(backend.name))
+                         scope=tune_scope(backend.name),
+                         pruned=tuple(pruned))
     else:
         # every candidate failed (including the analytic plan): serve the
         # analytic plan anyway — it's the only choice that needs no
@@ -145,6 +148,7 @@ def autotune_plan(spec: ZooSpec, edges: np.ndarray, num_nodes: int, *,
         rec = TuneRecord(plan=analytic, plan_source="analytic_fallback",
                          winner_ms=None, analytic_ms=None, speedup=None,
                          candidates=tuple(m for m, _ in measured),
-                         scope=tune_scope(backend.name))
+                         scope=tune_scope(backend.name),
+                         pruned=tuple(pruned))
     save_record(key, rec, cache_dir)
     return rec

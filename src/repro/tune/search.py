@@ -17,7 +17,12 @@ candidates two ways:
 
 Candidates are deduplicated by their executed configuration — two plans
 that differ only in analytic estimates run the same kernels, so only one
-is measured — and truncated to the measurement budget in rank order.
+is measured — then statically pruned
+(:func:`repro.analyze.plan_lint.prune_candidates`: legality violations
+and execution-identical duplicates — the runtime consumes only shard_n +
+per-layer (B, fused), so order/n/S variants run the same program) and
+truncated to the measurement budget in rank order. Pruned candidates are
+reported through ``pruned_out``, never silently dropped.
 """
 from __future__ import annotations
 
@@ -58,12 +63,21 @@ def candidate_plans(spec: ZooSpec, num_nodes: int, num_edges: int, *,
                     analytic: ModelPlan,
                     platform: Platform = GNNERATOR, max_n: int = 1024,
                     block_candidates: tuple[int, ...] = _BLOCK_CANDIDATES,
-                    top_k: int = 4, budget: int = 16) -> list[ModelPlan]:
+                    top_k: int = 4, budget: int = 16,
+                    backend_name: str | None = None,
+                    pruned_out: list | None = None) -> list[ModelPlan]:
     """At most ``budget`` whole-model candidates, analytic plan first.
 
     ``top_k`` bounds the per-layer rank depth explored; the traversal
     order axis is widened to both orders (the analytic planner only ever
-    proposes the Table-I best order for a grid width)."""
+    proposes the Table-I best order for a grid width).
+
+    Candidates are statically pruned before the budget truncation —
+    legality checks run against ``backend_name``'s memory budget, and
+    execution-identical duplicates are dropped — so every budget slot
+    goes to a distinct, runnable config. The analytic candidate #0 is
+    never pruned. ``pruned_out``, when given, receives one record per
+    pruned candidate (``index``/``reason``/``rules``/``detail``)."""
     if budget <= 0:
         return []
     per_layer = [
@@ -95,4 +109,9 @@ def candidate_plans(spec: ZooSpec, num_nodes: int, num_edges: int, *,
                 layers = list(analytic.layers)
                 layers[li] = cands[rank]
                 push(layers)
-    return out[:budget]
+
+    from repro.analyze.plan_lint import prune_candidates
+    kept, pruned = prune_candidates(out, backend_name=backend_name)
+    if pruned_out is not None:
+        pruned_out.extend(pruned)
+    return kept[:budget]

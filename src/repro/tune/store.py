@@ -30,7 +30,10 @@ from repro.gnn.executor import ModelPlan, plan_key
 from repro.gnn.models import ZooSpec
 from repro.tune.measure import Measurement
 
-TUNER_VERSION = 1
+# v2: static plan pruning (repro.analyze.plan_lint) changed the measured
+# candidate set, so v1 winners are not comparable — bumping invalidates
+# every stored record at once (stale versions load as cache misses)
+TUNER_VERSION = 2
 
 _TUNE_CACHE: dict[str, "TuneRecord"] = {}
 _TUNE_STATS = {"hits": 0, "misses": 0, "disk_hits": 0, "corrupt": 0,
@@ -85,6 +88,10 @@ class TuneRecord:
     speedup: float | None            # analytic_ms / winner_ms
     candidates: tuple[Measurement, ...]
     scope: dict                      # environment the timings are valid in
+    # candidates rejected by static analysis before any measurement
+    # (repro.analyze.plan_lint.prune_candidates records), never silently
+    # dropped from the report
+    pruned: tuple[dict, ...] = ()
 
     @property
     def n_measured(self) -> int:
@@ -94,12 +101,18 @@ class TuneRecord:
         """What Executable.summary() and the benchmarks surface."""
         from repro.tune.search import layer_config
         errors = sum(1 for m in self.candidates if m.status != "ok")
+        by_reason: dict[str, int] = {}
+        for p in self.pruned:
+            r = p.get("reason", "unknown")
+            by_reason[r] = by_reason.get(r, 0) + 1
         return {"plan_source": self.plan_source,
                 "winner_ms": self.winner_ms,
                 "analytic_ms": self.analytic_ms,
                 "speedup": self.speedup,
                 "candidates_measured": self.n_measured,
                 "candidates_failed": errors,
+                "candidates_pruned": len(self.pruned),
+                "pruned_reasons": by_reason,
                 "winner_config": [layer_config(p) for p in self.plan.layers]}
 
     def to_json(self) -> dict:
@@ -110,6 +123,7 @@ class TuneRecord:
                 "analytic_ms": self.analytic_ms,
                 "speedup": self.speedup,
                 "candidates": [m.to_json() for m in self.candidates],
+                "pruned": [dict(p) for p in self.pruned],
                 "scope": self.scope}
 
     @classmethod
@@ -125,6 +139,7 @@ class TuneRecord:
                    speedup=d.get("speedup"),
                    candidates=tuple(Measurement.from_json(m)
                                     for m in d.get("candidates", ())),
+                   pruned=tuple(dict(p) for p in d.get("pruned", ())),
                    scope=dict(d.get("scope", {})))
 
 

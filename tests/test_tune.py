@@ -85,6 +85,54 @@ class TestSearch:
             analytic=analytic, max_n=64, budget=0) == []
 
 
+class TestStaticPruning:
+    """Plan-lint pruning runs inside candidate_plans: doomed or
+    execution-identical configs are rejected statically — before any
+    measurement — and the tune report says so."""
+
+    def test_pruning_never_removes_analytic_candidate(self):
+        ds, spec = _setup()
+        analytic = executor.plan_model(spec, ds.profile.num_nodes,
+                                       ds.edges.shape[0], max_n=64)
+        pruned = []
+        cands = tune.candidate_plans(spec, ds.profile.num_nodes,
+                                     ds.edges.shape[0], analytic=analytic,
+                                     max_n=64, budget=8,
+                                     backend_name="reference",
+                                     pruned_out=pruned)
+        assert tune.plan_digest(cands[0]) == tune.plan_digest(analytic)
+        # both traversal orders are enumerated but the runtime executes
+        # them identically, so the cora space always holds duplicates
+        assert pruned, "expected >= 1 statically-pruned candidate"
+        for rec in pruned:
+            assert rec["index"] > 0          # analytic #0 is untouchable
+            assert rec["reason"] in ("illegal", "duplicate-execution")
+            assert rec["detail"]
+
+        from repro.analyze import plan_lint
+        for c in cands:                      # kept => legal
+            assert [f for f in plan_lint.check_model_plan(
+                c, backend_name="reference")
+                if f.severity == "error"] == []
+        digests = [plan_lint.executed_digest(c) for c in cands]
+        assert len(set(digests)) == len(digests)   # kept => distinct program
+
+    def test_tune_report_records_pruned(self, tmp_path):
+        ds, spec = _setup()
+        be = resolve(None, "reference")
+        rec = tune.autotune_plan(spec, ds.edges, ds.profile.num_nodes,
+                                 backend=be, features=ds.features, max_n=64,
+                                 budget=6, reps=1, cache_dir=tmp_path)
+        rep = rec.report()
+        assert rep["candidates_pruned"] == len(rec.pruned)
+        assert rep["candidates_pruned"] >= 1
+        assert sum(rep["pruned_reasons"].values()) == rep["candidates_pruned"]
+        # pruned classes never reach measurement, so nothing fails there
+        assert rep["candidates_failed"] == 0
+        back = TuneRecord.from_json(json.loads(json.dumps(rec.to_json())))
+        assert back.pruned == rec.pruned
+
+
 class TestAutotuneMemoization:
     """Same (arch, graph signature, budget, seed) -> identical winner with
     zero re-measurement on the second call."""
